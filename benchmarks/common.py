@@ -1,0 +1,39 @@
+"""Shared benchmark utilities."""
+import sys
+import os
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+
+
+def timeit(fn, *args, iters: int = 3, warmup: int = 1):
+    """Median wall time of fn(*args) with device sync, after warmup."""
+    for _ in range(warmup):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        times.append(time.perf_counter() - t0)
+    return sorted(times)[len(times) // 2]
+
+
+def td3_batch(key, n, b=256, obs=17, act=6):
+    """HalfCheetah-v2 dimensions (the paper's Fig. 2 workload)."""
+    ks = jax.random.split(key, 5)
+    return {
+        "obs": jax.random.normal(ks[0], (n, b, obs)),
+        "action": jax.random.uniform(ks[1], (n, b, act), minval=-1, maxval=1),
+        "reward": jax.random.normal(ks[2], (n, b)),
+        "next_obs": jax.random.normal(ks[3], (n, b, obs)),
+        "done": jnp.zeros((n, b)),
+    }
+
+
+def emit(row):
+    print(",".join(str(x) for x in row), flush=True)

@@ -1,0 +1,32 @@
+"""Paper Table 3: initial compilation time for a population of 20 agents,
+Jax (Vectorized) with chained update steps."""
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, td3_batch
+from repro.core import population_init, vectorized_update
+from repro.rl import td3, sac
+
+OBS, ACT = 17, 6
+
+
+def run(n=20, num_steps=10):
+    key = jax.random.PRNGKey(0)
+    emit(["bench", "agent", "pop", "num_steps", "compile_s"])
+    for name, mod in (("td3", td3), ("sac", sac)):
+        pop = population_init(lambda k: mod.init(k, OBS, ACT), key, n)
+        batches = jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (num_steps,) + x.shape),
+            td3_batch(key, n))
+        fn = vectorized_update(mod.update, num_steps, donate=False)
+        t0 = time.perf_counter()
+        out = fn(pop, batches, None)
+        jax.block_until_ready(out)
+        emit(["compile_time", name, n, num_steps,
+              round(time.perf_counter() - t0, 2)])
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,35 @@
+"""Paper Table 2: per-interaction time (env step + jitted policy forward)."""
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, timeit
+from repro.envs import make
+from repro.rl import td3, sac
+
+
+def run(iters=5):
+    emit(["bench", "env", "agent", "ms_per_interaction"])
+    key = jax.random.PRNGKey(0)
+    for env_name in ("pendulum", "reacher", "cartpole"):
+        env = make(env_name)
+        for agent_name, mod in (("td3", td3), ("sac", sac)):
+            if env.spec.discrete:
+                continue
+            st = mod.init(key, env.spec.obs_dim, env.spec.act_dim)
+            actor = st.actor
+
+            @jax.jit
+            def interact(state, obs, k):
+                a = mod.policy(actor, obs, k)
+                return env.step(state, a)
+
+            state, obs = env.reset(key)
+            def one():
+                s, o, r, d = interact(state, obs, key)
+                return o
+            t = timeit(one, iters=iters)
+            emit(["env_step", env_name, agent_name, round(1e3 * t, 4)])
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,55 @@
+"""Paper Fig. 2: update-step time vs population size per implementation.
+
+Arms (this runtime has no CUDA/torch — Torch arms are reported as n/a with
+the paper's published qualitative result quoted in EXPERIMENTS.md):
+  jax_sequential_1   — one jit'd single-agent step, python loop over members
+  jax_sequential_50  — same, 50 steps chained per call (paper's async trick)
+  jax_vectorized_1   — jit(vmap(step))            (the paper's protocol)
+  jax_vectorized_50  — jit(vmap(50 chained steps))
+Reported: ms per *member-update-step* and speedup vs jax_sequential_1.
+"""
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, td3_batch, timeit
+from repro.core import population_init, sequential_update, vectorized_update
+from repro.rl import td3, sac
+
+OBS, ACT = 17, 6
+
+
+def run(pop_sizes=(1, 2, 4, 8, 16), num_steps_chained=10, agents=("td3", "sac"),
+        iters=3):
+    key = jax.random.PRNGKey(0)
+    emit(["bench", "agent", "impl", "pop", "ms_per_member_step", "speedup_vs_seq1"])
+    for agent_name in agents:
+        mod = {"td3": td3, "sac": sac}[agent_name]
+        base_ms = None
+        for n in pop_sizes:
+            pop = population_init(lambda k: mod.init(k, OBS, ACT), key, n)
+            b1 = td3_batch(key, n)
+            bk = jax.tree.map(
+                lambda x: jnp.broadcast_to(x, (num_steps_chained,) + x.shape),
+                b1)
+            arms = {
+                "jax_sequential_1": (sequential_update(mod.update, 1), b1, 1),
+                f"jax_sequential_{num_steps_chained}":
+                    (sequential_update(mod.update, num_steps_chained), bk,
+                     num_steps_chained),
+                "jax_vectorized_1":
+                    (vectorized_update(mod.update, 1, donate=False), b1, 1),
+                f"jax_vectorized_{num_steps_chained}":
+                    (vectorized_update(mod.update, num_steps_chained,
+                                       donate=False), bk, num_steps_chained),
+            }
+            for name, (fn, batch, steps) in arms.items():
+                t = timeit(lambda: fn(pop, batch, None), iters=iters)
+                ms = 1e3 * t / (n * steps)
+                if name == "jax_sequential_1" and n == 1:
+                    base_ms = ms
+                emit(["population_update", agent_name, name, n, round(ms, 3),
+                      round(base_ms / ms, 2) if base_ms else ""])
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,52 @@
+"""Roofline report: reads the dry-run artifact (dryrun_results.json) and
+prints the per-(arch x shape x mesh) three-term table plus the
+MODEL_FLOPS / HLO_FLOPS usefulness ratio (task spec §Roofline)."""
+import json
+import os
+
+from benchmarks.common import emit
+from repro.configs import LM_SHAPES, get_config
+from repro.models.accounting import model_flops, param_count, active_param_count
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "dryrun_results.json")
+RESULTS_OPT = os.path.join(os.path.dirname(__file__), "..",
+                           "dryrun_results_opt.json")
+
+
+def run(path=None, single_pod_only=False):
+    if path is None:
+        for p, tag in ((RESULTS, "baseline (paper-faithful)"),
+                       (RESULTS_OPT, "optimized (§Perf)")):
+            emit(["roofline", f"--- {tag} ---"])
+            run(p, single_pod_only)
+        return
+    if not os.path.exists(path):
+        emit(["roofline", "SKIPPED — run python -m repro.launch.dryrun --all "
+              "--both-meshes --out dryrun_results.json first"])
+        return
+    rows = json.load(open(path))
+    emit(["bench", "arch", "shape", "mesh", "t_compute_s", "t_memory_s",
+          "t_collective_s", "bottleneck", "model_flops_ratio",
+          "hbm_gb_per_device"])
+    by_name = {}
+    for r in rows:
+        if "bottleneck" not in r:
+            continue
+        mesh = "x".join(str(v) for v in r["mesh"].values())
+        if single_pod_only and len(r["mesh"]) == 3:
+            continue
+        arch_id = r["arch"].replace("-", "_").replace(".", "_")
+        cfg = get_config(arch_id)
+        shape = LM_SHAPES[r["shape"]]
+        mf = model_flops(cfg, shape) / r["num_devices"]
+        ratio = mf / max(r["hlo_flops_per_device"], 1.0)
+        hbm = (r["bytes_per_device"]["arguments"] +
+               r["bytes_per_device"]["temps"]) / 1e9
+        emit(["roofline", r["arch"], r["shape"], mesh,
+              round(r["t_compute"], 4), round(r["t_memory"], 4),
+              round(r["t_collective"], 4), r["bottleneck"],
+              round(ratio, 3), round(hbm, 2)])
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,54 @@
+"""Benchmark harness — one function per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--fast]
+
+CSV rows go to stdout (``name,...,derived`` per the repo convention):
+  population_update — paper Fig. 2 (update speed vs implementation x pop)
+  shared_critic     — paper Fig. 4 (§4.2 shared-critic update)
+  env_step          — paper Table 2 (per-interaction time)
+  compile_time      — paper Table 3 (initial compilation, pop of 20)
+  roofline          — (ours) dry-run three-term roofline per arch x shape
+"""
+import argparse
+import sys
+import os
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="smaller pops / fewer iters (CI mode)")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset of bench names")
+    args = ap.parse_args()
+
+    from benchmarks import (compile_time, env_step, population_update,
+                            roofline, shared_critic)
+    sel = set(args.only.split(",")) if args.only else None
+
+    def want(name):
+        return sel is None or name in sel
+
+    if want("population_update"):
+        if args.fast:
+            population_update.run(pop_sizes=(1, 2, 4), num_steps_chained=5,
+                                  agents=("td3",), iters=2)
+        else:
+            population_update.run()
+    if want("shared_critic"):
+        shared_critic.run(pop_sizes=(2, 4) if args.fast else (2, 4, 8, 16),
+                          iters=2 if args.fast else 3)
+    if want("env_step"):
+        env_step.run()
+    if want("compile_time"):
+        compile_time.run(n=4 if args.fast else 20,
+                         num_steps=5 if args.fast else 10)
+    if want("roofline"):
+        roofline.run()
+
+
+if __name__ == "__main__":
+    main()

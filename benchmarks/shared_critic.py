@@ -1,0 +1,30 @@
+"""Paper Fig. 4: shared-critic population update, vectorized (§4.2) vs the
+original CEM-RL sequential interleaving."""
+import jax
+
+from benchmarks.common import emit, td3_batch, timeit
+from repro.core.shared import (init as shared_init,
+                               make_shared_critic_update,
+                               sequential_shared_critic_update)
+
+OBS, ACT = 17, 6
+
+
+def run(pop_sizes=(2, 4, 8, 16), iters=3):
+    key = jax.random.PRNGKey(0)
+    emit(["bench", "impl", "pop", "ms_per_update", "speedup"])
+    vec = jax.jit(make_shared_critic_update())
+    seq = jax.jit(sequential_shared_critic_update())
+    for n in pop_sizes:
+        st = shared_init(key, OBS, ACT, n)
+        batch = td3_batch(key, n)
+        t_seq = timeit(lambda: seq(st, batch, None), iters=iters)
+        t_vec = timeit(lambda: vec(st, batch, None), iters=iters)
+        emit(["shared_critic", "sequential(CEM-RL orig)", n,
+              round(1e3 * t_seq, 2), 1.0])
+        emit(["shared_critic", "vectorized(paper 4.2)", n,
+              round(1e3 * t_vec, 2), round(t_seq / t_vec, 2)])
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,21 @@
+"""The paper's technique on a language model: PBT over a population of
+reduced-config LMs, one vectorized update stream, with checkpointing.
+
+This is the bridge between the paper's RL setting (§5.1) and the
+framework's LM scale-out (EXPERIMENTS.md §Population): the exact same
+`core` machinery drives both.
+
+    PYTHONPATH=src python examples/population_lm.py
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.launch import train
+
+if __name__ == "__main__":
+    train.main(["--arch", "qwen2_0_5b", "--smoke", "--population", "4",
+                "--steps", "60", "--batch", "4", "--seq-len", "64",
+                "--pbt-interval", "20", "--ckpt-dir", "/tmp/population_lm",
+                "--resume", "none"])

@@ -1,0 +1,47 @@
+"""Quickstart: the paper's protocol in ~40 lines.
+
+Train a population of 8 TD3 agents with per-member hyperparameters using ONE
+compiled vectorized update step, on data collected from the pure-JAX
+pendulum env.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import HyperSpace
+from repro.core import population_init, sample_hypers, vectorized_update
+from repro.envs import make, rollout
+from repro.rl import td3
+
+N = 8
+env = make("pendulum")
+key = jax.random.PRNGKey(0)
+
+# 1. a population is the single-agent state with a leading axis
+pop = population_init(lambda k: td3.init(k, env.spec.obs_dim,
+                                         env.spec.act_dim), key, N)
+
+# 2. per-member hyperparameters are just vmapped leaves
+space = HyperSpace(log_uniform=(("actor_lr", 3e-5, 3e-3),
+                                ("critic_lr", 3e-5, 3e-3)))
+hypers = sample_hypers(key, space, N)
+
+# 3. ONE compiled call updates every member (the paper's Fig. 1, right)
+update = vectorized_update(td3.update, num_steps=1, donate=False)
+
+# 4. data collection vectorizes over the population too
+collect = jax.jit(lambda actors, keys: jax.vmap(
+    lambda a, k: rollout(env, td3.policy, a, k, 256))(actors, keys))
+
+for it in range(10):
+    key, kc = jax.random.split(key)
+    traj = collect(pop.actor, jax.random.split(kc, N))
+    batch = jax.tree.map(lambda x: x[:, -256:], traj)
+    pop, metrics = update(pop, batch, hypers)
+    print(f"iter {it}: mean reward {float(traj['reward'].mean()):+.3f} "
+          f"critic loss {float(metrics['critic_loss'].mean()):.3f}")
+print("OK — 8 agents trained in one vectorized stream")

@@ -1,0 +1,140 @@
+"""Fault-tolerant checkpointing: atomic, async, retention, auto-resume.
+
+1000-node design notes:
+  * writes are atomic (tmp dir + ``os.replace``) — a preempted writer never
+    corrupts the latest checkpoint, so any surviving worker can restart from
+    ``latest()``;
+  * saves can run on a background thread (``save_async``) so the train loop
+    never blocks on IO (straggler mitigation at the host level);
+  * a retention policy bounds disk usage;
+  * ``SignalHandler`` flushes an emergency checkpoint on SIGTERM (the
+    preemption signal on cloud TPU/TRN fleets).
+  * on real multi-host meshes each host writes only the shards it owns
+    (addressable shards); on this single-host runtime that degenerates to a
+    full write, same code path.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import signal
+import threading
+from pathlib import Path
+from typing import Any
+
+import jax
+import numpy as np
+
+
+def _flatten(tree):
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    return leaves, treedef
+
+
+def save_pytree(path: str | Path, tree: Any, extra: dict | None = None):
+    """Atomic save: write to <path>.tmp then os.replace."""
+    path = Path(path)
+    tmp = path.with_name(path.name + ".tmp")
+    if tmp.exists():
+        shutil.rmtree(tmp)
+    tmp.mkdir(parents=True)
+    leaves, treedef = _flatten(tree)
+    arrs = {f"leaf_{i}": np.asarray(jax.device_get(l)) for i, l in enumerate(leaves)}
+    np.savez(tmp / "arrays.npz", **arrs)
+    meta = {"num_leaves": len(leaves), "extra": extra or {},
+            "treedef": str(treedef)}
+    (tmp / "meta.json").write_text(json.dumps(meta))
+    if path.exists():
+        shutil.rmtree(path)
+    os.replace(tmp, path)
+
+
+def load_pytree(path: str | Path, template: Any):
+    """Restore into the structure of ``template`` (shape/dtype preserved)."""
+    path = Path(path)
+    with np.load(path / "arrays.npz") as data:
+        leaves = [data[f"leaf_{i}"] for i in range(len(data.files))]
+    _, treedef = _flatten(template)
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def load_extra(path: str | Path) -> dict:
+    return json.loads((Path(path) / "meta.json").read_text())["extra"]
+
+
+class CheckpointManager:
+    def __init__(self, directory: str | Path, *, keep: int = 3):
+        self.dir = Path(directory)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self.keep = keep
+        self._thread: threading.Thread | None = None
+
+    def _ckpt_path(self, step: int) -> Path:
+        return self.dir / f"step_{step:010d}"
+
+    def all_steps(self) -> list[int]:
+        steps = []
+        for p in self.dir.glob("step_*"):
+            if p.name.endswith(".tmp"):
+                continue
+            try:
+                steps.append(int(p.name.split("_")[1]))
+            except ValueError:
+                continue
+        return sorted(steps)
+
+    def latest(self) -> int | None:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def save(self, step: int, tree: Any, extra: dict | None = None):
+        save_pytree(self._ckpt_path(step), tree,
+                    dict(extra or {}, step=step))
+        self._gc()
+
+    def save_async(self, step: int, tree: Any, extra: dict | None = None):
+        """Non-blocking save; device->host copy happens here (cheap), IO on
+        the background thread."""
+        self.wait()
+        host_tree = jax.device_get(tree)
+        self._thread = threading.Thread(
+            target=self.save, args=(step, host_tree, extra), daemon=True)
+        self._thread.start()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def restore(self, template: Any, step: int | None = None):
+        step = self.latest() if step is None else step
+        if step is None:
+            return None, None
+        path = self._ckpt_path(step)
+        return load_pytree(path, template), load_extra(path)
+
+    def _gc(self):
+        steps = self.all_steps()
+        for s in steps[:-self.keep] if self.keep else []:
+            shutil.rmtree(self._ckpt_path(s), ignore_errors=True)
+
+
+class SignalHandler:
+    """SIGTERM/SIGINT → emergency checkpoint before exit (preemption)."""
+
+    def __init__(self, manager: CheckpointManager, get_state):
+        self.manager = manager
+        self.get_state = get_state
+        self.triggered = False
+        for sig in (signal.SIGTERM,):
+            try:
+                signal.signal(sig, self._handle)
+            except ValueError:  # not main thread (tests)
+                pass
+
+    def _handle(self, signum, frame):
+        self.triggered = True
+        step, tree, extra = self.get_state()
+        self.manager.wait()
+        self.manager.save(step, tree, dict(extra, preempted=True))

@@ -1,0 +1,5 @@
+from repro.configs.base import (  # noqa: F401
+    LMConfig, MoESpec, MLASpec, ShapeSpec, LM_SHAPES, applicable_shapes,
+    HyperSpace, PopulationConfig, TrainConfig,
+)
+from repro.configs.registry import get_config, list_configs  # noqa: F401

@@ -1,0 +1,163 @@
+"""Config dataclasses: model architectures, input shapes, population/PBT.
+
+All configs are frozen dataclasses → hashable → usable as jit static args.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Optional
+
+
+@dataclass(frozen=True)
+class MoESpec:
+    num_experts: int
+    top_k: int
+    d_expert: int
+    num_shared: int = 0
+    first_dense_layers: int = 0
+    capacity_factor: float = 1.25
+    group_size: int = 256   # per-group capacity keeps dispatch memory O(T*k*cf)
+    aux_loss_weight: float = 0.01
+
+
+@dataclass(frozen=True)
+class MLASpec:
+    kv_lora_rank: int = 512
+    qk_nope_dim: int = 128
+    qk_rope_dim: int = 64
+    v_dim: int = 128
+
+
+@dataclass(frozen=True)
+class LMConfig:
+    name: str
+    family: str                    # dense | moe | ssm | hybrid | audio | vlm
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: Optional[int] = None  # defaults to d_model // num_heads
+    qkv_bias: bool = False
+    qk_norm: bool = False
+    activation: str = "silu"       # silu -> SwiGLU, gelu -> GeGLU
+    rope_theta: float = 10000.0
+    tie_embeddings: bool = False
+    block_type: str = "attention"  # attention | rwkv6 | mamba2
+    ssm_state: int = 0
+    ssm_head_dim: int = 64
+    shared_attn_every: int = 0     # zamba2: shared attn block period (0 = off)
+    moe: Optional[MoESpec] = None
+    mla: Optional[MLASpec] = None
+    frontend: str = "none"         # none | audio_frames | vision_patches
+    num_frontend_positions: int = 0
+    dtype: str = "bfloat16"
+    remat: bool = True
+    use_chunked: bool = True       # chunked SSM/WKV path (vs literal scan)
+    ssm_chunk: int = 128           # SSD/WKV chunk length
+    ssm_compute_dtype: str = "float32"  # intra-chunk einsum dtype (perf knob)
+    logits_chunk: int = 0          # >0: chunk the loss over the seq axis
+    use_flash: bool = False        # Pallas flash attention (TPU only)
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.num_heads
+
+    @property
+    def sub_quadratic(self) -> bool:
+        """True iff long-context (500k) decode is supported (see DESIGN.md)."""
+        return self.block_type in ("rwkv6", "mamba2")
+
+    def replace(self, **kw) -> "LMConfig":
+        return dataclasses.replace(self, **kw)
+
+    def smoke(self) -> "LMConfig":
+        """Reduced same-family config for CPU smoke tests."""
+        kw = dict(
+            num_layers=min(self.num_layers, 2 if self.shared_attn_every == 0 else 8),
+            d_model=128,
+            num_heads=4,
+            num_kv_heads=max(1, min(self.num_kv_heads, 2)),
+            d_ff=256,
+            vocab_size=512,
+            head_dim=32 if self.head_dim else None,
+            dtype="float32",
+            remat=False,
+        )
+        if self.moe is not None:
+            kw["moe"] = dataclasses.replace(
+                self.moe, num_experts=4, top_k=2, d_expert=64,
+                num_shared=min(self.moe.num_shared, 1), group_size=64)
+        if self.mla is not None:
+            kw["mla"] = MLASpec(kv_lora_rank=32, qk_nope_dim=16,
+                                qk_rope_dim=8, v_dim=16)
+        if self.shared_attn_every:
+            kw["shared_attn_every"] = 4
+        if self.num_frontend_positions:
+            kw["num_frontend_positions"] = 8
+        if self.block_type in ("rwkv6", "mamba2"):
+            kw["ssm_head_dim"] = 32
+            kw["ssm_state"] = 16 if self.block_type == "mamba2" else 0
+        return self.replace(**kw)
+
+
+@dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+
+LM_SHAPES = {
+    "train_4k": ShapeSpec("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524288, 1, "decode"),
+}
+
+
+def applicable_shapes(cfg: LMConfig) -> list[str]:
+    names = ["train_4k", "prefill_32k", "decode_32k"]
+    if cfg.sub_quadratic:
+        names.append("long_500k")
+    return names
+
+
+@dataclass(frozen=True)
+class HyperSpace:
+    """Per-hyperparameter prior: log-uniform or uniform ranges (paper §B.1)."""
+    log_uniform: tuple = ()   # ((name, lo, hi), ...)
+    uniform: tuple = ()       # ((name, lo, hi), ...)
+
+    @property
+    def names(self):
+        return tuple(n for n, _, _ in self.log_uniform) + \
+               tuple(n for n, _, _ in self.uniform)
+
+
+@dataclass(frozen=True)
+class PopulationConfig:
+    """The paper's technique as a first-class config feature."""
+    size: int = 1
+    pbt_interval: int = 100_000          # update steps between exploit/explore
+    exploit_frac: float = 0.3            # paper §B.1: bottom/top 30%
+    perturb_prob: float = 0.5            # resample vs perturb
+    perturb_scale: float = 1.2
+    hyper_space: HyperSpace = field(default_factory=HyperSpace)
+    fitness_window: int = 10             # last-k episode returns / -loss window
+
+
+@dataclass(frozen=True)
+class TrainConfig:
+    lr: float = 3e-4
+    weight_decay: float = 0.1
+    max_grad_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    seed: int = 0
+    population: PopulationConfig = field(default_factory=PopulationConfig)
+    grad_compression: str = "none"       # none | int8
+    grad_accum: int = 1                  # microbatches per optimizer step

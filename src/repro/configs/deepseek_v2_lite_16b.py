@@ -1,0 +1,17 @@
+"""deepseek-v2-lite-16b [moe] — MLA kv_lora=512, shared+routed experts.
+
+27L d_model=2048 16H d_ff=1408 (per-expert) vocab=102400, MoE 64e top-6
+[arXiv:2405.04434; hf].  See DESIGN.md for the 64-vs-160 routed-expert
+discrepancy in the assignment line (we follow the bracketed spec: 64 routed,
+top-6, +2 shared); first layer is dense as in the released model.
+"""
+from repro.configs.base import LMConfig, MoESpec, MLASpec
+
+CONFIG = LMConfig(
+    name="deepseek-v2-lite-16b", family="moe",
+    num_layers=27, d_model=2048, num_heads=16, num_kv_heads=16,
+    d_ff=1408, vocab_size=102400,
+    moe=MoESpec(num_experts=64, top_k=6, d_expert=1408, num_shared=2,
+                first_dense_layers=1),
+    mla=MLASpec(kv_lora_rank=512, qk_nope_dim=128, qk_rope_dim=64, v_dim=128),
+)

@@ -1,0 +1,13 @@
+# The paper's primary contribution: vectorization + compilation protocols
+# for population-based training (FastPBRL, ICML 2022).
+from repro.core.population import (  # noqa: F401
+    population_init, stack_members, unstack_members, member, population_size,
+)
+from repro.core.vectorize import (  # noqa: F401
+    vectorized_update, sequential_update, chain_steps,
+)
+from repro.core.hyperparams import sample_hypers, perturb_hypers  # noqa: F401
+from repro.core.pbt import pbt_step  # noqa: F401
+from repro.core.cem import cem_init, cem_sample, cem_update  # noqa: F401
+from repro.core.dvd import dvd_loss, behavior_embedding  # noqa: F401
+from repro.core.shared import make_shared_critic_update  # noqa: F401

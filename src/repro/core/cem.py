@@ -1,0 +1,49 @@
+"""Cross-Entropy Method over policy parameters (CEM-RL, Pourchot & Sigaud).
+
+The CEM distribution is a diagonal gaussian over the *flattened* policy
+parameter vector.  Sampling N members = one (N, P) matrix — which is exactly
+the stacked-population layout, so CEM composes with the vectorized TD3
+update for the CEM-RL case study (§5.2).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.flatten_util import ravel_pytree
+
+
+class CEMState(NamedTuple):
+    mean: jnp.ndarray      # (P,)
+    var: jnp.ndarray       # (P,)
+    noise: jnp.ndarray     # scalar additive noise (decays)
+
+
+def cem_init(params_template, sigma_init: float = 1e-2,
+             noise_init: float = 1e-2):
+    """The paper increases CEM initial noise from 1e-3 to 1e-2 (§B.2)."""
+    flat, unravel = ravel_pytree(params_template)
+    state = CEMState(mean=flat, var=jnp.full_like(flat, sigma_init),
+                     noise=jnp.asarray(noise_init))
+    return state, unravel
+
+
+def cem_sample(key, state: CEMState, n: int):
+    eps = jax.random.normal(key, (n,) + state.mean.shape)
+    return state.mean + jnp.sqrt(state.var + state.noise) * eps
+
+
+def cem_update(state: CEMState, samples, fitness, elite_frac: float = 0.5,
+               noise_decay: float = 0.999):
+    """samples: (N, P); fitness: (N,) higher-better. Elite-weighted update."""
+    n = fitness.shape[0]
+    k = max(1, int(round(n * elite_frac)))
+    elite_idx = jnp.argsort(fitness)[n - k:]
+    elites = samples[elite_idx]
+    # log-rank weights (standard CEM-RL weighting)
+    w = jnp.log(1 + k) - jnp.log(jnp.arange(1, k + 1, dtype=jnp.float32))
+    w = (w / w.sum())[::-1]                   # ascending fitness order
+    mean = jnp.einsum("i,ip->p", w, elites)
+    var = jnp.einsum("i,ip->p", w, jnp.square(elites - state.mean))
+    return CEMState(mean=mean, var=var, noise=state.noise * noise_decay)

@@ -1,0 +1,48 @@
+"""Distribution of the population over the device mesh.
+
+The paper scales out by running islands of vectorized members per
+accelerator (§5.1: 80 agents = 4 T4s x 20 vectorized members).  The
+TPU-native generalization: the population axis of every stacked pytree is
+sharded over mesh axes, and the PBT exploit step — a gather by parent
+index — lowers to XLA collectives automatically under jit, so cross-pod
+member exchange costs one collective per PBT interval.
+
+``population_sharding`` builds NamedShardings that put the population axis
+on the requested mesh axes and replicate everything else (each member's
+parameters are small, per the paper's §3 assumption; large-model members
+use the FSDP/TP specs of repro.models.sharding instead).
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+def population_axes(mesh) -> tuple:
+    names = tuple(mesh.axis_names)
+    return tuple(a for a in ("pod", "data") if a in names)
+
+
+def population_sharding(tree, mesh, n: int | None = None):
+    """Shard leading population axis over ('pod','data'); replicate rest."""
+    axes = population_axes(mesh)
+    size = int(np.prod([mesh.shape[a] for a in axes])) if axes else 1
+
+    def spec(leaf):
+        pop = jax.tree.leaves(tree)[0].shape[0] if n is None else n
+        if leaf.ndim >= 1 and leaf.shape[0] == pop and size > 1 and pop % size == 0:
+            return NamedSharding(mesh, P(axes))
+        return NamedSharding(mesh, P())
+    return jax.tree.map(spec, tree)
+
+
+def shard_population(tree, mesh):
+    return jax.device_put(tree, population_sharding(tree, mesh))
+
+
+def all_members_fitness(fitness, mesh):
+    """Fitness is tiny ((N,)); keep it replicated so the argsort in pbt_step
+    is local on every device (one all-gather, inserted by XLA)."""
+    return jax.device_put(fitness, NamedSharding(mesh, P()))

@@ -1,0 +1,51 @@
+"""Per-member hyperparameters as vmapped leaves (paper §5.1 / §B.1).
+
+Hyperparameters live in a dict of (N,)-shaped arrays and are passed to the
+vmapped update step like any other input, so each member trains with its own
+values inside ONE compiled call.  Sampling follows the paper's priors:
+log-uniform for learning rates, uniform for the rest.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import HyperSpace
+
+
+def sample_hypers(key, space: HyperSpace, n: int):
+    out = {}
+    for i, (name, lo, hi) in enumerate(space.log_uniform):
+        k = jax.random.fold_in(key, i)
+        out[name] = jnp.exp(jax.random.uniform(
+            k, (n,), minval=jnp.log(lo), maxval=jnp.log(hi)))
+    for j, (name, lo, hi) in enumerate(space.uniform):
+        k = jax.random.fold_in(key, 1000 + j)
+        out[name] = jax.random.uniform(k, (n,), minval=lo, maxval=hi)
+    return out
+
+
+def _bounds(space: HyperSpace, name: str):
+    for n, lo, hi in tuple(space.log_uniform) + tuple(space.uniform):
+        if n == name:
+            return lo, hi
+    raise KeyError(name)
+
+
+def perturb_hypers(key, hypers, space: HyperSpace, mask,
+                   perturb_prob: float = 0.5, scale: float = 1.2):
+    """PBT explore: for members where ``mask`` is True, either resample from
+    the prior or multiply by scale^{±1} (clipped to the prior range)."""
+    fresh = sample_hypers(jax.random.fold_in(key, 0), space,
+                          mask.shape[0])
+    out = {}
+    for i, name in enumerate(sorted(hypers)):
+        lo, hi = _bounds(space, name)
+        k1, k2 = jax.random.split(jax.random.fold_in(key, 17 + i))
+        up = jax.random.bernoulli(k1, 0.5, mask.shape)
+        perturbed = jnp.clip(hypers[name] * jnp.where(up, scale, 1.0 / scale),
+                             lo, hi)
+        use_resample = jax.random.bernoulli(k2, perturb_prob, mask.shape)
+        explored = jnp.where(use_resample, fresh[name], perturbed)
+        out[name] = jnp.where(mask, explored, hypers[name])
+    return out

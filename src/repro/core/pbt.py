@@ -1,0 +1,44 @@
+"""On-device PBT exploit/explore (paper §5.1, Jaderberg et al. 2017).
+
+Everything is ``jax.lax`` — no host round-trip — so the PBT step jit-compiles
+and, when the population axis is sharded over the mesh (pod axis), the member
+gathers lower to XLA collectives (see core/distributed.py).  Protocol
+(paper §B.1): every ``pbt_interval`` update steps, the bottom
+``exploit_frac`` of members (by windowed fitness) copy the full training
+state of a random top-``exploit_frac`` member and re-explore hyperparameters.
+
+Straggler note: fitness enters as "last known" values — a member whose
+actors lag simply keeps its previous window (late fitness reports do not
+block the step), which is the paper's async-friendly behaviour.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import PopulationConfig
+from repro.core.hyperparams import perturb_hypers
+
+
+def pbt_step(key, pop_state, hypers, fitness, pcfg: PopulationConfig):
+    """fitness: (N,) — higher is better. Returns (pop_state, hypers, parents).
+
+    ``parents[i]`` is the member whose state member i now holds (== i for
+    survivors); exposed for logging/lineage tracking.
+    """
+    n = fitness.shape[0]
+    k = max(1, int(round(n * pcfg.exploit_frac)))
+    order = jnp.argsort(fitness)              # ascending
+    bottom, top = order[:k], order[n - k:]
+
+    kp, kh = jax.random.split(key)
+    parent_choice = top[jax.random.randint(kp, (k,), 0, k)]
+    parents = jnp.arange(n).at[bottom].set(parent_choice)
+
+    new_state = jax.tree.map(lambda x: x[parents], pop_state)
+    replaced = jnp.zeros((n,), bool).at[bottom].set(True)
+    new_hypers = jax.tree.map(lambda x: x[parents], hypers)
+    new_hypers = perturb_hypers(kh, new_hypers, pcfg.hyper_space, replaced,
+                                perturb_prob=pcfg.perturb_prob,
+                                scale=pcfg.perturb_scale)
+    return new_state, new_hypers, parents

@@ -1,0 +1,36 @@
+"""Population state = stacked pytrees (the paper's core data layout).
+
+A population of N agents is the single-agent state pytree with a leading
+population axis on every leaf.  This is what makes the paper's protocol
+work: one ``vmap`` over axis 0 turns the single-agent update step into the
+population update step, memory is allocated in one chunk per leaf
+(minimizing fragmentation — §4 "Memory considerations"), and the same pytree
+shards over a mesh axis for multi-accelerator populations.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def population_init(init_fn, key, n: int):
+    """vmap an ``init_fn(key) -> state`` over n split keys."""
+    return jax.vmap(init_fn)(jax.random.split(key, n))
+
+
+def stack_members(members):
+    """List of per-member pytrees -> stacked population pytree."""
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *members)
+
+
+def unstack_members(pop):
+    n = population_size(pop)
+    return [jax.tree.map(lambda x: x[i], pop) for i in range(n)]
+
+
+def member(pop, i):
+    return jax.tree.map(lambda x: x[i], pop)
+
+
+def population_size(pop) -> int:
+    return jax.tree.leaves(pop)[0].shape[0]

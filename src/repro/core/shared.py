@@ -1,0 +1,175 @@
+"""Shared-critic population update — the paper's §4.2 contribution.
+
+CEM-RL / DvD / QD-PG share ONE critic across the population while each
+member owns its policy.  The original CEM-RL interleaves per-member critic
+updates sequentially, which kills vectorization.  The paper's second-order
+modification: every batch flows through ALL policies in parallel and the
+critic loss is AVERAGED over the population (same total number of critic
+updates; no impact on sample efficiency — paper Figs. 6/8).
+
+This module implements that update for TD3 (the algorithm all three case
+studies use):
+  * critic step: mean over members of the per-member TD3 critic loss,
+    gradients flowing into the single shared critic;
+  * policy step: per-member TD3 actor loss against the shared critic,
+    vmapped (optionally + a joint DvD diversity term).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim import adam, apply_updates
+from repro.rl import networks as nets
+from repro.rl.td3 import NOISE_CLIP, TAU, DEFAULT_HYPERS
+from repro.core.dvd import behavior_embedding, dvd_loss
+
+_opt_init, _opt_update = adam(3e-4)
+
+
+class SharedCriticState(NamedTuple):
+    policies: Any          # stacked (N, ...) actor params
+    critic: Any            # single shared critic
+    target_policies: Any
+    target_critic: Any
+    policy_opt: Any        # stacked
+    critic_opt: Any
+    step: jnp.ndarray
+    key: jnp.ndarray
+
+
+def init(key, obs_dim: int, act_dim: int, n: int) -> SharedCriticState:
+    kp, kc, kk = jax.random.split(key, 3)
+    policies = jax.vmap(lambda k: nets.actor_init(k, obs_dim, act_dim))(
+        jax.random.split(kp, n))
+    critic = nets.critic_init(kc, obs_dim, act_dim)
+    return SharedCriticState(
+        policies=policies, critic=critic,
+        target_policies=jax.tree.map(jnp.copy, policies),
+        target_critic=jax.tree.map(jnp.copy, critic),
+        policy_opt=jax.vmap(_opt_init)(policies), critic_opt=_opt_init(critic),
+        step=jnp.zeros((), jnp.int32), key=kk)
+
+
+def _member_critic_loss(critic, target_policy, target_critic, batch, key, h):
+    noise = jnp.clip(h["noise"] * jax.random.normal(key, batch["action"].shape),
+                     -NOISE_CLIP, NOISE_CLIP)
+    next_a = jnp.clip(nets.actor_apply(target_policy, batch["next_obs"]) + noise,
+                      -1.0, 1.0)
+    tq1, tq2 = nets.critic_apply(target_critic, batch["next_obs"], next_a)
+    target = batch["reward"] + h["discount"] * (1 - batch["done"]) * \
+        jnp.minimum(tq1, tq2)
+    q1, q2 = nets.critic_apply(critic, batch["obs"], batch["action"])
+    target = jax.lax.stop_gradient(target)
+    return jnp.mean((q1 - target) ** 2) + jnp.mean((q2 - target) ** 2)
+
+
+def make_shared_critic_update(*, dvd_coef_fn=None, probe_size: int = 20):
+    """Returns jit-able ``update(state, batches, hypers) -> (state, metrics)``.
+
+    batches: pytree with leading (N, B, ...) — one batch per member (§4.2:
+    "each batch of training data goes through all of the policy networks").
+    """
+
+    def update(state: SharedCriticState, batches, hypers=None):
+        h = dict(DEFAULT_HYPERS)
+        if hypers:
+            h.update(hypers)
+        key, kc = jax.random.split(state.key)
+
+        # --- critic step: loss averaged over the population (§4.2) ---------
+        def critic_loss(critic):
+            keys = jax.random.split(kc, jax.tree.leaves(batches)[0].shape[0])
+            losses = jax.vmap(
+                lambda tp, b, k: _member_critic_loss(
+                    critic, tp, state.target_critic, b, k, h)
+            )(state.target_policies, batches, keys)
+            return jnp.mean(losses)
+
+        closs, cgrads = jax.value_and_grad(critic_loss)(state.critic)
+        cupd, critic_opt = _opt_update(cgrads, state.critic_opt,
+                                       lr_override=h["critic_lr"])
+        critic = apply_updates(state.critic, cupd)
+
+        # --- policy step: per-member actor loss, vmapped -------------------
+        def pop_actor_loss(policies):
+            def one(policy, b):
+                a = nets.actor_apply(policy, b["obs"])
+                q1, _ = nets.critic_apply(critic, b["obs"], a)
+                return -jnp.mean(q1)
+            loss = jnp.mean(jax.vmap(one)(policies, batches))
+            if dvd_coef_fn is not None:
+                probe = jax.tree.map(lambda x: x[0, :probe_size],
+                                     batches)["obs"]
+                emb = behavior_embedding(nets.actor_apply, policies, probe)
+                loss = loss + dvd_coef_fn(state.step) * dvd_loss(emb)
+            return loss
+
+        aloss, agrads = jax.value_and_grad(pop_actor_loss)(state.policies)
+        aupd, policy_opt = jax.vmap(
+            lambda g, o: _opt_update(g, o, lr_override=h["actor_lr"])
+        )(agrads, state.policy_opt)
+        policies = apply_updates(state.policies, aupd)
+
+        soft = lambda t, o: jax.tree.map(
+            lambda a, b: (1 - TAU) * a + TAU * b, t, o)
+        new_state = SharedCriticState(
+            policies=policies, critic=critic,
+            target_policies=soft(state.target_policies, policies),
+            target_critic=soft(state.target_critic, critic),
+            policy_opt=policy_opt, critic_opt=critic_opt,
+            step=state.step + 1, key=key)
+        return new_state, {"critic_loss": closs, "actor_loss": aloss}
+
+    return update
+
+
+def sequential_shared_critic_update():
+    """The ORIGINAL CEM-RL ordering (Algorithm 1): per-member critic updates
+    interleaved sequentially between policy updates.  Kept as the baseline
+    arm for the paper's Fig. 4 benchmark."""
+
+    def update(state: SharedCriticState, batches, hypers=None):
+        h = dict(DEFAULT_HYPERS)
+        if hypers:
+            h.update(hypers)
+        key, kc = jax.random.split(state.key)
+        n = jax.tree.leaves(batches)[0].shape[0]
+        critic, critic_opt = state.critic, state.critic_opt
+        closs = jnp.zeros(())
+        for i in range(n):
+            b = jax.tree.map(lambda x: x[i], batches)
+            tp = jax.tree.map(lambda x: x[i], state.target_policies)
+            li, g = jax.value_and_grad(_member_critic_loss)(
+                critic, tp, state.target_critic, b,
+                jax.random.fold_in(kc, i), h)
+            u, critic_opt = _opt_update(g, critic_opt,
+                                        lr_override=h["critic_lr"])
+            critic = apply_updates(critic, u)
+            closs = closs + li / n
+
+        def one_actor(policy, opt, b):
+            def loss(p):
+                a = nets.actor_apply(p, b["obs"])
+                q1, _ = nets.critic_apply(critic, b["obs"], a)
+                return -jnp.mean(q1)
+            l, g = jax.value_and_grad(loss)(policy)
+            u, opt = _opt_update(g, opt, lr_override=h["actor_lr"])
+            return apply_updates(policy, u), opt, l
+
+        policies, policy_opt, alosses = jax.vmap(one_actor)(
+            state.policies, state.policy_opt, batches)
+        soft = lambda t, o: jax.tree.map(
+            lambda a, b: (1 - TAU) * a + TAU * b, t, o)
+        new_state = SharedCriticState(
+            policies=policies, critic=critic,
+            target_policies=soft(state.target_policies, policies),
+            target_critic=soft(state.target_critic, critic),
+            policy_opt=policy_opt, critic_opt=critic_opt,
+            step=state.step + 1, key=key)
+        return new_state, {"critic_loss": closs,
+                           "actor_loss": jnp.mean(alosses)}
+
+    return update

@@ -1,0 +1,5 @@
+from repro.data.replay_buffer import (  # noqa: F401
+    ReplayBuffer, buffer_init, buffer_add, buffer_sample, buffer_can_sample,
+)
+from repro.data.prefetch import Prefetcher, DoubleBuffer  # noqa: F401
+from repro.data.lm_pipeline import synthetic_token_stream, host_batches  # noqa: F401

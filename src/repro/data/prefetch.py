@@ -1,0 +1,75 @@
+"""Host-side async data plumbing (the paper's Appendix A, in one process).
+
+``Prefetcher`` runs a producer callable on a background thread and keeps a
+bounded queue of ready batches, so device update chains never wait on the
+host — the paper's requirement that "training data is available ... without
+delay whenever an update step has just completed".
+
+``DoubleBuffer`` keeps batch k+1 transferring to device while batch k is
+being consumed (classic double-buffering; `jax.device_put` is async).
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Callable, Iterator
+
+import jax
+
+
+class Prefetcher:
+    def __init__(self, producer: Callable[[], object], depth: int = 2):
+        self._q: queue.Queue = queue.Queue(maxsize=depth)
+        self._stop = threading.Event()
+        self._exc: BaseException | None = None
+
+        def run():
+            try:
+                while not self._stop.is_set():
+                    item = producer()
+                    while not self._stop.is_set():
+                        try:
+                            self._q.put(item, timeout=0.1)
+                            break
+                        except queue.Full:
+                            continue
+            except BaseException as e:  # surfaced on next __next__
+                self._exc = e
+
+        self._thread = threading.Thread(target=run, daemon=True)
+        self._thread.start()
+
+    def __iter__(self):
+        return self
+
+    def __next__(self):
+        while True:
+            if self._exc is not None:
+                raise self._exc
+            try:
+                return self._q.get(timeout=0.5)
+            except queue.Empty:
+                continue
+
+    def close(self):
+        self._stop.set()
+
+
+class DoubleBuffer:
+    """Wrap a host-batch iterator; yields device arrays one step ahead."""
+
+    def __init__(self, it: Iterator, device=None):
+        self._it = iter(it)
+        self._device = device or jax.devices()[0]
+        self._next = self._put(next(self._it))
+
+    def _put(self, x):
+        return jax.device_put(x, self._device)
+
+    def __iter__(self):
+        return self
+
+    def __next__(self):
+        out = self._next
+        self._next = self._put(next(self._it))
+        return out

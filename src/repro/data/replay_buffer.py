@@ -1,0 +1,56 @@
+"""Device-resident FIFO replay buffer (functional pytree, vmappable).
+
+The paper (Appendix A) hosts one replay buffer per agent in the process that
+owns the accelerator.  Here the buffer is itself a pytree of device arrays so
+an entire *population* of buffers is just this pytree with a leading
+population axis — inserts and samples vmap across members exactly like the
+update steps do, and buffer donation (``donate_argnums``) makes inserts
+in-place on device.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class ReplayBuffer(NamedTuple):
+    data: Any              # pytree; leaves (capacity, ...)
+    insert_pos: jnp.ndarray
+    total: jnp.ndarray     # number of items ever added
+
+
+def buffer_init(capacity: int, sample_transition) -> ReplayBuffer:
+    """``sample_transition``: pytree of arrays/ShapeDtypeStructs (one item)."""
+    data = jax.tree.map(
+        lambda x: jnp.zeros((capacity,) + tuple(x.shape), x.dtype),
+        sample_transition)
+    return ReplayBuffer(data=data, insert_pos=jnp.zeros((), jnp.int32),
+                        total=jnp.zeros((), jnp.int32))
+
+
+def buffer_add(buf: ReplayBuffer, batch) -> ReplayBuffer:
+    """Insert a batch (leading axis n) at the ring position (FIFO)."""
+    n = jax.tree.leaves(batch)[0].shape[0]
+    capacity = jax.tree.leaves(buf.data)[0].shape[0]
+    idx = (buf.insert_pos + jnp.arange(n)) % capacity
+
+    def ins(store, items):
+        return store.at[idx].set(items.astype(store.dtype))
+
+    return ReplayBuffer(
+        data=jax.tree.map(ins, buf.data, batch),
+        insert_pos=(buf.insert_pos + n) % capacity,
+        total=buf.total + n)
+
+
+def buffer_can_sample(buf: ReplayBuffer, batch_size: int):
+    return buf.total >= batch_size
+
+
+def buffer_sample(buf: ReplayBuffer, key, batch_size: int):
+    capacity = jax.tree.leaves(buf.data)[0].shape[0]
+    limit = jnp.minimum(buf.total, capacity)
+    idx = jax.random.randint(key, (batch_size,), 0, jnp.maximum(limit, 1))
+    return jax.tree.map(lambda store: store[idx], buf.data)

@@ -1,0 +1,1 @@
+from repro.envs.core import Env, EnvSpec, make, rollout  # noqa: F401

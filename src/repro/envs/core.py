@@ -1,0 +1,187 @@
+"""Pure-JAX environments (Brax-style), fully vmappable.
+
+MuJoCo/Atari are unavailable here and CPU-bound anyway; following the paper's
+own §4 recommendation ("simulators with built-in support for hardware
+accelerators ... must be used"), physics are implemented in ``jax.lax`` so
+both data collection *and* updates vectorize over the population on one
+accelerator.
+
+API (functional):
+    env = make("pendulum")
+    state, obs = env.reset(key)
+    state, obs, reward, done = env.step(state, action)
+Auto-reset on ``done`` is built into ``step`` (state carries its own rng).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class EnvSpec:
+    name: str
+    obs_dim: int
+    act_dim: int            # continuous dims, or number of discrete actions
+    discrete: bool
+    episode_length: int
+    act_limit: float = 1.0
+
+
+@dataclass(frozen=True)
+class Env:
+    spec: EnvSpec
+    reset: Callable
+    step: Callable
+
+
+# ---------------------------------------------------------------------------
+# pendulum (continuous; the HalfCheetah stand-in for SAC/TD3 studies)
+# ---------------------------------------------------------------------------
+
+_PEND = dict(max_speed=8.0, max_torque=2.0, dt=0.05, g=10.0, m=1.0, l=1.0)
+
+
+def _pendulum_obs(s):
+    th, thdot = s["theta"], s["thetadot"]
+    return jnp.stack([jnp.cos(th), jnp.sin(th), thdot / _PEND["max_speed"]], -1)
+
+
+def _pendulum_reset(key):
+    k1, k2, k3 = jax.random.split(key, 3)
+    state = {
+        "theta": jax.random.uniform(k1, (), minval=-jnp.pi, maxval=jnp.pi),
+        "thetadot": jax.random.uniform(k2, (), minval=-1.0, maxval=1.0),
+        "t": jnp.zeros((), jnp.int32),
+        "key": k3,
+    }
+    return state, _pendulum_obs(state)
+
+
+def _pendulum_step(state, action):
+    u = jnp.clip(action[..., 0] * _PEND["max_torque"],
+                 -_PEND["max_torque"], _PEND["max_torque"])
+    th, thdot = state["theta"], state["thetadot"]
+    norm_th = ((th + jnp.pi) % (2 * jnp.pi)) - jnp.pi
+    cost = norm_th ** 2 + 0.1 * thdot ** 2 + 0.001 * u ** 2
+    g, m, l, dt = (_PEND[k] for k in ("g", "m", "l", "dt"))
+    thdot = thdot + (3 * g / (2 * l) * jnp.sin(th) + 3.0 / (m * l ** 2) * u) * dt
+    thdot = jnp.clip(thdot, -_PEND["max_speed"], _PEND["max_speed"])
+    th = th + thdot * dt
+    t = state["t"] + 1
+    done = t >= 200
+    new = dict(state, theta=th, thetadot=thdot, t=t)
+    return _auto_reset(_pendulum_reset, new, done), _pendulum_obs(new), \
+        -cost / 10.0, done
+
+
+# ---------------------------------------------------------------------------
+# reacher (continuous point-mass reaching; the Humanoid stand-in for DvD)
+# ---------------------------------------------------------------------------
+
+
+def _reacher_obs(s):
+    return jnp.concatenate([s["pos"], s["vel"], s["target"] - s["pos"]], -1)
+
+
+def _reacher_reset(key):
+    k1, k2 = jax.random.split(key)
+    state = {
+        "pos": jnp.zeros((2,)), "vel": jnp.zeros((2,)),
+        "target": jax.random.uniform(k1, (2,), minval=-1.0, maxval=1.0),
+        "t": jnp.zeros((), jnp.int32), "key": k2,
+    }
+    return state, _reacher_obs(state)
+
+
+def _reacher_step(state, action):
+    a = jnp.clip(action, -1.0, 1.0)
+    vel = 0.9 * state["vel"] + 0.1 * a
+    pos = jnp.clip(state["pos"] + 0.1 * vel, -2.0, 2.0)
+    dist = jnp.linalg.norm(pos - state["target"])
+    reward = -dist - 0.01 * jnp.sum(a ** 2)
+    t = state["t"] + 1
+    done = t >= 100
+    new = dict(state, pos=pos, vel=vel, t=t)
+    return _auto_reset(_reacher_reset, new, done), _reacher_obs(new), reward, done
+
+
+# ---------------------------------------------------------------------------
+# cartpole (discrete; the Atari stand-in for DQN)
+# ---------------------------------------------------------------------------
+
+
+def _cartpole_obs(s):
+    return s["x"]
+
+
+def _cartpole_reset(key):
+    k1, k2 = jax.random.split(key)
+    state = {"x": jax.random.uniform(k1, (4,), minval=-0.05, maxval=0.05),
+             "t": jnp.zeros((), jnp.int32), "key": k2}
+    return state, _cartpole_obs(state)
+
+
+def _cartpole_step(state, action):
+    gravity, mc, mp, lp, fmag, dt = 9.8, 1.0, 0.1, 0.5, 10.0, 0.02
+    x, xd, th, thd = (state["x"][i] for i in range(4))
+    force = jnp.where(action.astype(jnp.int32) == 1, fmag, -fmag)
+    cth, sth = jnp.cos(th), jnp.sin(th)
+    tmp = (force + mp * lp * thd ** 2 * sth) / (mc + mp)
+    thacc = (gravity * sth - cth * tmp) / (lp * (4.0 / 3 - mp * cth ** 2 / (mc + mp)))
+    xacc = tmp - mp * lp * thacc * cth / (mc + mp)
+    nx = jnp.stack([x + dt * xd, xd + dt * xacc, th + dt * thd, thd + dt * thacc])
+    t = state["t"] + 1
+    fail = (jnp.abs(nx[0]) > 2.4) | (jnp.abs(nx[2]) > 0.2095)
+    done = fail | (t >= 500)
+    reward = 1.0 - fail.astype(jnp.float32)
+    new = dict(state, x=nx, t=t)
+    return _auto_reset(_cartpole_reset, new, done), _cartpole_obs(new), reward, done
+
+
+# ---------------------------------------------------------------------------
+
+
+def _auto_reset(reset_fn, state, done):
+    k_next, k_reset = jax.random.split(state["key"])
+    fresh, _ = reset_fn(k_reset)
+    fresh = dict(fresh, key=k_next)
+    state = dict(state, key=k_next)
+    return jax.tree.map(lambda a, b: jnp.where(done, a, b), fresh, state)
+
+
+_REGISTRY = {
+    "pendulum": (EnvSpec("pendulum", 3, 1, False, 200, 1.0),
+                 _pendulum_reset, _pendulum_step),
+    "reacher": (EnvSpec("reacher", 6, 2, False, 100, 1.0),
+                _reacher_reset, _reacher_step),
+    "cartpole": (EnvSpec("cartpole", 4, 2, True, 500),
+                 _cartpole_reset, _cartpole_step),
+}
+
+
+def make(name: str) -> Env:
+    spec, reset, step = _REGISTRY[name]
+    return Env(spec=spec, reset=reset, step=step)
+
+
+def rollout(env: Env, policy_fn, params, key, num_steps: int):
+    """Collect a trajectory with a jitted scan. policy_fn(params, obs, key)."""
+    state, obs = env.reset(key)
+
+    def body(carry, _):
+        state, obs = carry
+        k = state["key"]
+        ka, _ = jax.random.split(k)
+        action = policy_fn(params, obs, ka)
+        nstate, nobs, reward, done = env.step(state, action)
+        trans = {"obs": obs, "action": action, "reward": reward,
+                 "next_obs": nobs, "done": done.astype(jnp.float32)}
+        return (nstate, nobs), trans
+
+    (_, _), traj = jax.lax.scan(body, (state, obs), None, length=num_steps)
+    return traj

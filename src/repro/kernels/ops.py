@@ -1,0 +1,55 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+``interpret`` defaults to "auto": real Mosaic lowering on TPU backends,
+interpret mode elsewhere (CPU validation).  The model layer calls these only
+when ``cfg.use_flash`` / kernel flags are on; the dry-run lowers the pure-XLA
+path so CPU cost_analysis stays well-defined (see DESIGN.md §5).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import flash_attention as _fa
+from repro.kernels import pop_adam as _pa
+from repro.kernels import pop_matmul as _pm
+from repro.kernels import ssd as _ssd
+from repro.kernels import wkv6 as _wkv
+
+
+def _auto_interpret(interpret):
+    if interpret is not None:
+        return interpret
+    return jax.default_backend() != "tpu"
+
+
+@partial(jax.jit, static_argnames=("activation", "interpret"))
+def pop_matmul(x, w, b=None, *, activation: str = "none", interpret=None):
+    return _pm.pop_matmul(x, w, b, activation=activation,
+                          interpret=_auto_interpret(interpret))
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def pop_adam(params, grads, mu, nu, lr, step, *, interpret=None):
+    return _pa.pop_adam(params, grads, mu, nu, lr, step,
+                        interpret=_auto_interpret(interpret))
+
+
+@partial(jax.jit, static_argnames=("causal", "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, interpret=None):
+    return _fa.flash_attention(q, k, v, causal=causal,
+                               interpret=_auto_interpret(interpret))
+
+
+@partial(jax.jit, static_argnames=("chunk", "interpret"))
+def wkv6(r, k, v, lw, u, initial_state, *, chunk: int = 64, interpret=None):
+    return _wkv.wkv6(r, k, v, lw, u, initial_state, chunk=chunk,
+                     interpret=_auto_interpret(interpret))
+
+
+@partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd(x, dt, a, b, c, initial_state, *, chunk: int = 128, interpret=None):
+    return _ssd.ssd(x, dt, a, b, c, initial_state, chunk=chunk,
+                    interpret=_auto_interpret(interpret))

@@ -1,0 +1,59 @@
+"""Fused population-Adam Pallas kernel.
+
+The paper's protocol makes the *optimizer* update the second compute hot
+spot after the matmuls: N members' Adam states update elementwise every
+step.  XLA emits one elementwise chain per leaf per member; this kernel
+fuses the whole thing over flattened member parameters with the
+PER-MEMBER learning rate (the vmapped-hyperparameter protocol) read from
+SMEM, one grid row per (member, block).
+
+Layout: params/grads/mu/nu (N, P) fp32, lr (N,), step scalar.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(step_ref, lr_ref, p_ref, g_ref, mu_ref, nu_ref,
+            po_ref, muo_ref, nuo_ref, *, b1: float, b2: float, eps: float):
+    g = g_ref[0].astype(jnp.float32)
+    mu = b1 * mu_ref[0] + (1.0 - b1) * g
+    nu = b2 * nu_ref[0] + (1.0 - b2) * g * g
+    step = step_ref[0].astype(jnp.float32)
+    c1 = 1.0 - b1 ** step
+    c2 = 1.0 - b2 ** step
+    lr = lr_ref[0]
+    upd = lr * (mu / c1) / (jnp.sqrt(nu / c2) + eps)
+    po_ref[0] = p_ref[0] - upd
+    muo_ref[0] = mu
+    nuo_ref[0] = nu
+
+
+def pop_adam(params, grads, mu, nu, lr, step, *, b1: float = 0.9,
+             b2: float = 0.999, eps: float = 1e-8, block: int = 4096,
+             interpret: bool = False):
+    """params/grads/mu/nu: (N, P); lr: (N,); step: () int32 (1-based).
+
+    Returns (new_params, new_mu, new_nu)."""
+    n, p = params.shape
+    block = min(block, p)
+    assert p % block == 0, (p, block)
+    kern = functools.partial(_kernel, b1=b1, b2=b2, eps=eps)
+    row = pl.BlockSpec((1, block), lambda i, j: (i, j))
+    out = pl.pallas_call(
+        kern,
+        grid=(n, p // block),
+        in_specs=[pl.BlockSpec((1,), lambda i, j: (0,)),       # step
+                  pl.BlockSpec((1,), lambda i, j: (i,)),       # lr
+                  row, row, row, row],
+        out_specs=[row, row, row],
+        out_shape=[jax.ShapeDtypeStruct((n, p), jnp.float32)] * 3,
+        interpret=interpret,
+    )(step.reshape(1).astype(jnp.int32), lr.astype(jnp.float32),
+      params, grads, mu, nu)
+    return tuple(out)

@@ -1,0 +1,91 @@
+"""Mamba2 SSD chunked-scan Pallas kernel.
+
+Mirrors ``repro.nn.mamba2.ssd_chunked``: grid (B, H, S/chunk), the (P x N)
+SSM state carried in VMEM across chunks; each program computes the
+intra-chunk quadratic term (segsum decay) plus the inter-chunk state
+contribution, then advances the state.
+
+Layout: x (B,H,S,P), dt (B,H,S), b/c (B,S,N) (shared across heads — the
+index map ignores h), a (H,), initial state (B,H,P,N).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, s0_ref, y_ref, sout_ref,
+            state, *, chunk: int):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _():
+        state[...] = s0_ref[0, 0].astype(jnp.float32)
+
+    x = x_ref[0, 0].astype(jnp.float32)        # (CL, P)
+    dt = dt_ref[0, 0].astype(jnp.float32)      # (CL,)
+    a = a_ref[0]                               # scalar
+    bb = b_ref[0].astype(jnp.float32)          # (CL, N)
+    cc = c_ref[0].astype(jnp.float32)          # (CL, N)
+
+    lda = dt * a                               # (CL,), <= 0
+    ca = jnp.cumsum(lda)
+    ca_tot = ca[-1]
+
+    n = x.shape[0]
+    seg = ca[:, None] - ca[None, :]
+    rows = jax.lax.broadcasted_iota(jnp.int32, (n, n), 0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (n, n), 1)
+    tril = rows >= cols
+    decay = jnp.where(tril, jnp.exp(jnp.where(tril, seg, 0.0)), 0.0)
+    cb = jnp.dot(cc, bb.T, preferred_element_type=jnp.float32)  # (CLt, CLs)
+    m = cb * decay * dt[None, :]
+    y = jnp.dot(m, x, preferred_element_type=jnp.float32)
+
+    st = state[...]                            # (P, N)
+    y = y + jnp.exp(ca)[:, None] * jnp.dot(
+        cc, st.T, preferred_element_type=jnp.float32)
+    w_out = jnp.exp(ca_tot - ca) * dt          # (CL,)
+    state[...] = jnp.exp(ca_tot) * st + jnp.dot(
+        (x * w_out[:, None]).T, bb, preferred_element_type=jnp.float32)
+    y_ref[0, 0] = y.astype(y_ref.dtype)
+
+    @pl.when(ci == pl.num_programs(2) - 1)
+    def _():
+        sout_ref[0, 0] = state[...].astype(sout_ref.dtype)
+
+
+def ssd(x, dt, a, b, c, initial_state, *, chunk: int = 128,
+        interpret: bool = False):
+    """x: (B,H,S,P); dt: (B,H,S); a: (H,); b/c: (B,S,N); state: (B,H,P,N)."""
+    bsz, h, s, p = x.shape
+    n = b.shape[-1]
+    chunk = min(chunk, s)
+    assert s % chunk == 0
+
+    kern = functools.partial(_kernel, chunk=chunk)
+    y, sout = pl.pallas_call(
+        kern,
+        grid=(bsz, h, s // chunk),
+        in_specs=[
+            pl.BlockSpec((1, 1, chunk, p), lambda bi, hi, ci: (bi, hi, ci, 0)),
+            pl.BlockSpec((1, 1, chunk), lambda bi, hi, ci: (bi, hi, ci)),
+            pl.BlockSpec((1,), lambda bi, hi, ci: (hi,)),
+            pl.BlockSpec((1, chunk, n), lambda bi, hi, ci: (bi, ci, 0)),
+            pl.BlockSpec((1, chunk, n), lambda bi, hi, ci: (bi, ci, 0)),
+            pl.BlockSpec((1, 1, p, n), lambda bi, hi, ci: (bi, hi, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, chunk, p), lambda bi, hi, ci: (bi, hi, ci, 0)),
+            pl.BlockSpec((1, 1, p, n), lambda bi, hi, ci: (bi, hi, 0, 0)),
+        ],
+        out_shape=[jax.ShapeDtypeStruct((bsz, h, s, p), jnp.float32),
+                   jax.ShapeDtypeStruct((bsz, h, p, n), jnp.float32)],
+        scratch_shapes=[pltpu.VMEM((p, n), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, a, b, c, initial_state)
+    return y, sout

@@ -1,0 +1,53 @@
+"""Elastic re-layout: resume a checkpoint on a DIFFERENT mesh.
+
+The fault-tolerance contract at 1000-node scale: when nodes are lost, the
+launcher rebuilds a smaller mesh from the survivors and training resumes
+from the latest checkpoint.  Because checkpoints are saved as host numpy
+(full tensors) and all shardings are derived *functions* of the current
+mesh (repro.models.sharding rules), re-layout is: rebuild mesh -> recompute
+NamedShardings -> device_put.  Population members shrink gracefully: if the
+surviving mesh no longer fits the population, the worst members are dropped
+(PBT clones refill at the next exploit step — population training is
+naturally elastic).
+
+``plan_mesh`` picks the largest (data, model) grid for a surviving device
+count given a preferred model-parallel width.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models.sharding import param_specs
+
+
+def plan_mesh(num_devices: int, *, preferred_model: int = 16,
+              multi_pod: bool = False):
+    """Largest usable (data, model) grid for the surviving devices."""
+    model = preferred_model
+    while model > 1 and (num_devices % model or num_devices // model < 1):
+        model //= 2
+    data = num_devices // model
+    axes = ("data", "model")
+    shape = (data, model)
+    if multi_pod and data % 2 == 0:
+        shape, axes = (2, data // 2, model), ("pod", "data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def relayout(tree, mesh):
+    """Place a host (or differently-sharded) pytree onto ``mesh`` using the
+    rule-derived shardings."""
+    specs = param_specs(tree, mesh)
+    shardings = jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                             is_leaf=lambda x: isinstance(x, P))
+    return jax.device_put(tree, shardings)
+
+
+def shrink_population(pop_tree, fitness, new_size: int):
+    """Keep the ``new_size`` fittest members (elastic population shrink)."""
+    order = np.argsort(np.asarray(fitness))[::-1][:new_size]
+    keep = np.sort(order)
+    return jax.tree.map(lambda x: x[keep], pop_tree), keep

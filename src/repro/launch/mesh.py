@@ -1,0 +1,28 @@
+"""Production mesh construction (TPU v5e-256 pods).
+
+A FUNCTION (not a module-level constant) so importing this module never
+touches jax device state.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh(model: int = 2, data: int | None = None, *,
+                   pod: int | None = None):
+    """Small mesh over whatever devices exist (tests / single-host runs)."""
+    n = len(jax.devices())
+    if pod:
+        data = data or n // (model * pod)
+        return jax.make_mesh((pod, data, model), ("pod", "data", "model"),
+                             axis_types=(jax.sharding.AxisType.Auto,) * 3)
+    data = data or max(1, n // model)
+    return jax.make_mesh((data, model), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)

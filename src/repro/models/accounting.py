@@ -1,0 +1,66 @@
+"""Parameter / FLOP accounting for the roofline report.
+
+MODEL_FLOPS follows the task spec: 6*N*D for training (N = active params,
+D = tokens), 2*N*D for inference passes.  Attention score FLOPs
+(O(S^2) terms) are intentionally excluded — the ratio MODEL_FLOPS/HLO_FLOPS
+in EXPERIMENTS.md therefore *also* surfaces attention/remat/dispatch
+overheads, which is what we iterate on.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import LMConfig, ShapeSpec
+from repro.models import lm as lm_mod
+
+
+def _leaf_sizes_with_paths(cfg: LMConfig):
+    params = jax.eval_shape(lambda k: lm_mod.init_params(k, cfg),
+                            jax.random.PRNGKey(0))
+    flat = jax.tree_util.tree_flatten_with_path(params)[0]
+    out = []
+    for path, leaf in flat:
+        p = ".".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                     for k in path)
+        out.append((p, int(leaf.size)))
+    return out
+
+
+def param_count(cfg: LMConfig) -> int:
+    return sum(s for _, s in _leaf_sizes_with_paths(cfg))
+
+
+def active_param_count(cfg: LMConfig) -> int:
+    """Experts scaled by top_k/E; the zamba shared block counted once per
+    invocation (it runs num_layers/shared_attn_every times)."""
+    total = 0.0
+    moe_scale = (cfg.moe.top_k / cfg.moe.num_experts) if cfg.moe else 1.0
+    shared_mult = 1.0
+    if cfg.shared_attn_every:
+        n_inv = -(-cfg.num_layers // cfg.shared_attn_every)  # ceil
+        shared_mult = float(n_inv)
+    for path, size in _leaf_sizes_with_paths(cfg):
+        if "experts" in path:
+            total += size * moe_scale
+        elif path.startswith("shared_attn"):
+            total += size * shared_mult
+        elif path.startswith("embed") and not cfg.tie_embeddings:
+            # embedding lookup is a gather, not a matmul; exclude from the
+            # 6ND model (tied heads keep it — it is the output matmul then)
+            continue
+        else:
+            total += size
+    return int(total)
+
+
+def model_flops(cfg: LMConfig, shape: ShapeSpec) -> float:
+    n_active = active_param_count(cfg)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens
+    # decode: one token per sequence
+    return 2.0 * n_active * shape.global_batch

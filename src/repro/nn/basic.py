@@ -1,0 +1,204 @@
+"""Basic functional neural-network building blocks.
+
+Everything is pure-functional: ``init_*`` returns a pytree of parameters
+(plain nested dicts of ``jnp.ndarray``), ``*_apply`` consumes it.  No
+framework dependency — this substitutes flax/haiku which are unavailable.
+
+Parameters are stored in float32 ("master" precision); compute casts to the
+model dtype at apply time (mixed-precision recipe).
+"""
+from __future__ import annotations
+
+import math
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# initializers
+# ---------------------------------------------------------------------------
+
+
+def lecun_normal(key, shape, in_axis: int = -2, dtype=jnp.float32):
+    fan_in = shape[in_axis] if len(shape) > 1 else shape[0]
+    std = 1.0 / math.sqrt(fan_in)
+    return std * jax.random.truncated_normal(key, -2.0, 2.0, shape, dtype)
+
+
+def kaiming_uniform(key, shape, dtype=jnp.float32):
+    """Matches torch.nn.init.kaiming_uniform_(a=sqrt(5)) used by the paper's
+    VectorizedLinearLayer snippet (Appendix C)."""
+    fan_in = shape[0] if len(shape) > 1 else shape[0]
+    gain = math.sqrt(2.0 / (1.0 + 5.0))
+    bound = gain * math.sqrt(3.0 / fan_in)
+    return jax.random.uniform(key, shape, dtype, -bound, bound)
+
+
+def normal_init(key, shape, std=0.02, dtype=jnp.float32):
+    return std * jax.random.normal(key, shape, dtype)
+
+
+def zeros_init(_key, shape, dtype=jnp.float32):
+    return jnp.zeros(shape, dtype)
+
+
+def cast(tree, dtype):
+    """Cast all floating leaves of a pytree to ``dtype`` (compute precision)."""
+    def _c(x):
+        if jnp.issubdtype(x.dtype, jnp.floating):
+            return x.astype(dtype)
+        return x
+    return jax.tree.map(_c, tree)
+
+
+# ---------------------------------------------------------------------------
+# linear / mlp
+# ---------------------------------------------------------------------------
+
+
+def linear_init(key, in_features: int, out_features: int, *, bias: bool = True,
+                init=lecun_normal):
+    kw, kb = jax.random.split(key)
+    p = {"w": init(kw, (in_features, out_features))}
+    if bias:
+        p["b"] = jnp.zeros((out_features,), jnp.float32)
+    return p
+
+
+def linear_apply(p, x):
+    y = x @ p["w"]
+    if "b" in p:
+        y = y + p["b"]
+    return y
+
+
+_ACTS = {
+    "relu": jax.nn.relu,
+    "gelu": jax.nn.gelu,
+    "silu": jax.nn.silu,
+    "tanh": jnp.tanh,
+}
+
+
+def mlp_init(key, sizes: Sequence[int], *, bias: bool = True):
+    """Plain MLP (the paper's SAC/TD3 torso): sizes = [in, h1, ..., out]."""
+    keys = jax.random.split(key, len(sizes) - 1)
+    return {f"layer_{i}": linear_init(k, sizes[i], sizes[i + 1], bias=bias)
+            for i, k in enumerate(keys)}
+
+
+def mlp_apply(p, x, *, activation: str = "relu", final_activation: str | None = None):
+    n = len(p)
+    act = _ACTS[activation]
+    for i in range(n):
+        x = linear_apply(p[f"layer_{i}"], x)
+        if i < n - 1:
+            x = act(x)
+        elif final_activation is not None:
+            x = _ACTS[final_activation](x)
+    return x
+
+
+def glu_mlp_init(key, d_model: int, d_ff: int, *, bias: bool = False):
+    """Gated MLP (SwiGLU/GeGLU): gate/up/down projections."""
+    kg, ku, kd = jax.random.split(key, 3)
+    return {
+        "w_gate": {"w": lecun_normal(kg, (d_model, d_ff))},
+        "w_up": {"w": lecun_normal(ku, (d_model, d_ff))},
+        "w_down": {"w": lecun_normal(kd, (d_ff, d_model))},
+    }
+
+
+def glu_mlp_apply(p, x, *, activation: str = "silu"):
+    act = _ACTS[activation]
+    g = act(x @ p["w_gate"]["w"])
+    u = x @ p["w_up"]["w"]
+    return (g * u) @ p["w_down"]["w"]
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm_init(dim: int):
+    return {"scale": jnp.ones((dim,), jnp.float32)}
+
+
+def rmsnorm_apply(p, x, *, eps: float = 1e-6):
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps) * p["scale"].astype(jnp.float32)
+    return y.astype(dtype)
+
+
+def layernorm_init(dim: int):
+    return {"scale": jnp.ones((dim,), jnp.float32),
+            "bias": jnp.zeros((dim,), jnp.float32)}
+
+
+def layernorm_apply(p, x, *, eps: float = 1e-5):
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    y = y * p["scale"] + p["bias"]
+    return y.astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# embedding
+# ---------------------------------------------------------------------------
+
+
+def embedding_init(key, vocab: int, dim: int, std: float = 0.02):
+    return {"embedding": normal_init(key, (vocab, dim), std=std)}
+
+
+def embedding_apply(p, ids, dtype=None):
+    emb = p["embedding"]
+    if dtype is not None:
+        emb = emb.astype(dtype)
+    return jnp.take(emb, ids, axis=0)
+
+
+# ---------------------------------------------------------------------------
+# conv stack (DQN Atari-style torso)
+# ---------------------------------------------------------------------------
+
+
+def conv_init(key, in_ch: int, out_ch: int, kernel: int):
+    kw, kb = jax.random.split(key)
+    fan_in = in_ch * kernel * kernel
+    std = 1.0 / math.sqrt(fan_in)
+    return {
+        "w": std * jax.random.truncated_normal(kw, -2., 2., (kernel, kernel, in_ch, out_ch)),
+        "b": jnp.zeros((out_ch,), jnp.float32),
+    }
+
+
+def conv_apply(p, x, stride: int):
+    # x: (B, H, W, C)
+    y = jax.lax.conv_general_dilated(
+        x, p["w"], window_strides=(stride, stride), padding="VALID",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    return y + p["b"]
+
+
+def dqn_torso_init(key, in_ch: int = 4):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "conv_0": conv_init(k1, in_ch, 32, 8),
+        "conv_1": conv_init(k2, 32, 64, 4),
+        "conv_2": conv_init(k3, 64, 64, 3),
+    }
+
+
+def dqn_torso_apply(p, x):
+    x = jax.nn.relu(conv_apply(p["conv_0"], x, 4))
+    x = jax.nn.relu(conv_apply(p["conv_1"], x, 2))
+    x = jax.nn.relu(conv_apply(p["conv_2"], x, 1))
+    return x.reshape(x.shape[:-3] + (-1,))

@@ -1,0 +1,21 @@
+"""Rotary position embeddings (RoPE)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def rope_frequencies(head_dim: int, theta: float = 10000.0):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x, positions, *, theta: float = 10000.0):
+    """x: (..., S, H, D) or (..., S, D); positions: (..., S) int32."""
+    d = x.shape[-1]
+    freqs = rope_frequencies(d, theta)                       # (d/2,)
+    angles = positions.astype(jnp.float32)[..., None] * freqs  # (..., S, d/2)
+    if x.ndim == angles.ndim + 1:                            # head axis present
+        angles = angles[..., None, :]                        # (..., S, 1, d/2)
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)

@@ -1,0 +1,197 @@
+"""RWKV-6 ("Finch") blocks — attention-free, data-dependent per-channel decay.
+
+Two equivalent WKV implementations:
+  * ``wkv6_scan``    — the literal recurrence (oracle; also the decode step)
+  * ``wkv6_chunked`` — chunked linear-attention form (the compute-efficient
+    path: intra-chunk quadratic term + inter-chunk state carry). All decay
+    exponents are kept ≤ 0 (log-space cumsums) so nothing overflows.
+
+The Pallas kernel in ``repro/kernels/wkv6.py`` mirrors the chunked form.
+
+Recurrence per head (k-dim = v-dim = head_dim):
+    y_t = r_t^T (S_{t-1} + diag(u) k_t v_t^T)
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T          w_t = exp(-exp(ww_t)) ∈ (0,1)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.sharding import constrain
+from repro.nn.basic import lecun_normal, normal_init
+
+
+# ---------------------------------------------------------------------------
+# WKV6 core
+# ---------------------------------------------------------------------------
+
+
+def wkv6_scan(r, k, v, lw, u, state):
+    """Literal recurrence. r/k/v/lw: (B,S,H,D); u: (H,D); state: (B,H,D,D).
+
+    Returns (y (B,S,H,D), final_state). lw = log(w_t) <= 0."""
+    def step(s, inp):
+        r_t, k_t, v_t, lw_t = inp  # (B,H,D)
+        kv = k_t[..., :, None] * v_t[..., None, :]               # (B,H,Dk,Dv)
+        y = jnp.einsum("bhk,bhkv->bhv", r_t, s + u[..., :, None] * kv)
+        s = jnp.exp(lw_t)[..., :, None] * s + kv
+        return s, y
+    xs = tuple(jnp.moveaxis(a, 1, 0) for a in (r, k, v, lw))
+    final, ys = jax.lax.scan(step, state, xs)
+    return jnp.moveaxis(ys, 0, 1), final
+
+
+def wkv6_chunked(r, k, v, lw, u, state, *, chunk: int = 64,
+                 compute_dtype=jnp.float32):
+    """Chunked parallel form, exactly equal to ``wkv6_scan`` in fp32.
+
+    r/k/v/lw: (B,S,H,D) with S % chunk == 0; u: (H,D); state: (B,H,Dk,Dv).
+    """
+    b, s, h, d = r.shape
+    nc, cl = s // chunk, chunk
+    cd = compute_dtype
+    tril = jnp.tril(jnp.ones((cl, cl), bool), k=-1)[..., None]
+
+    # ALL chunk math lives inside the scan body (see ssd_chunked for why —
+    # remat granularity must match the scan step or backward traffic blows
+    # up by a factor of NC).
+    @jax.checkpoint
+    def body(st, inp):
+        rc, kc, vc, lwc = inp                        # (B,H,CL,D)
+        cl_cum = jnp.cumsum(lwc, axis=-2)
+        cl_prev = cl_cum - lwc                       # sum over s<t
+        cl_total = cl_cum[..., -1:, :]               # (B,H,1,D)
+
+        r_in = rc * jnp.exp(cl_prev)                 # attends to S_0
+        k_out = kc * jnp.exp(cl_total - cl_cum)      # carried to S_end
+
+        # A[t,s] = sum_i r[t,i] k[s,i] e^{cl_prev[t,i]-cl_cum[s,i]}, s < t
+        expo = cl_prev[..., :, None, :] - cl_cum[..., None, :, :]
+        decay = jnp.exp(jnp.where(tril, expo, -jnp.inf)).astype(cd)
+        a = jnp.einsum("bhtd,bhsd,bhtsd->bhts", rc.astype(cd), kc.astype(cd),
+                       decay, preferred_element_type=jnp.float32)
+        diag = jnp.einsum("bhtd,hd,bhtd->bht", rc, u, kc)
+        a = a + jnp.eye(cl, dtype=a.dtype) * diag[..., :, None]
+
+        y = jnp.einsum("bhtd,bhdv->bhtv", r_in, st) + jnp.einsum(
+            "bhts,bhsv->bhtv", a, vc)
+        st = jnp.exp(cl_total.squeeze(-2))[..., :, None] * st + jnp.einsum(
+            "bhsd,bhsv->bhdv", k_out, vc)
+        return st, y
+
+    def to_chunks(x):  # (B,S,H,D) -> (NC,B,H,CL,D)
+        return jnp.moveaxis(jnp.moveaxis(x.reshape(b, nc, cl, h, d), 3, 2), 1, 0)
+
+    xs = tuple(map(to_chunks, (r, k, v, lw)))
+    final, ys = jax.lax.scan(body, state, xs)
+    ys = jnp.moveaxis(ys, 0, 1)                      # (B,NC,H,CL,D)
+    return jnp.moveaxis(ys, 2, 3).reshape(b, s, h, d), final
+
+
+# ---------------------------------------------------------------------------
+# RWKV6 block (time-mix + channel-mix)
+# ---------------------------------------------------------------------------
+
+
+def rwkv6_block_init(key, *, d_model: int, d_ff: int, head_dim: int = 64,
+                     mix_lora: int = 32, decay_lora: int = 64):
+    ks = jax.random.split(key, 12)
+    h = d_model // head_dim
+    tm = {
+        "mix_base": 0.5 * jnp.ones((5, d_model), jnp.float32),   # r,k,v,w,g
+        "mix_w1": normal_init(ks[0], (d_model, 5 * mix_lora), std=0.01),
+        "mix_w2": normal_init(ks[1], (5, mix_lora, d_model), std=0.01),
+        "decay_base": jnp.zeros((d_model,), jnp.float32) - 4.0,
+        "decay_w1": normal_init(ks[2], (d_model, decay_lora), std=0.01),
+        "decay_w2": normal_init(ks[3], (decay_lora, d_model), std=0.01),
+        "bonus": normal_init(ks[4], (h, head_dim), std=0.3),
+        "wr": {"w": lecun_normal(ks[5], (d_model, d_model))},
+        "wk": {"w": lecun_normal(ks[6], (d_model, d_model))},
+        "wv": {"w": lecun_normal(ks[7], (d_model, d_model))},
+        "wg": {"w": lecun_normal(ks[8], (d_model, d_model))},
+        "wo": {"w": lecun_normal(ks[9], (d_model, d_model))},
+        "ln_x": {"scale": jnp.ones((d_model,), jnp.float32),
+                 "bias": jnp.zeros((d_model,), jnp.float32)},
+    }
+    cm = {
+        "mix_k": 0.5 * jnp.ones((d_model,), jnp.float32),
+        "mix_r": 0.5 * jnp.ones((d_model,), jnp.float32),
+        "wk": {"w": lecun_normal(ks[10], (d_model, d_ff))},
+        "wv": {"w": lecun_normal(ks[11], (d_ff, d_model))},
+        "wr": {"w": lecun_normal(jax.random.fold_in(key, 99), (d_model, d_model))},
+    }
+    return {"time_mix": tm, "channel_mix": cm}
+
+
+def rwkv6_init_state(batch: int, d_model: int, head_dim: int = 64,
+                     dtype=jnp.float32):
+    h = d_model // head_dim
+    return {
+        "wkv": jnp.zeros((batch, h, head_dim, head_dim), jnp.float32),
+        "tm_x": jnp.zeros((batch, d_model), dtype),
+        "cm_x": jnp.zeros((batch, d_model), dtype),
+    }
+
+
+def _group_norm(p, x, n_heads: int, eps: float = 64e-5):
+    """Per-head layer norm over head channels. x: (B,S,D)."""
+    b, s, d = x.shape
+    xh = x.reshape(b, s, n_heads, d // n_heads).astype(jnp.float32)
+    mu = jnp.mean(xh, axis=-1, keepdims=True)
+    var = jnp.var(xh, axis=-1, keepdims=True)
+    y = ((xh - mu) * jax.lax.rsqrt(var + eps)).reshape(b, s, d)
+    return (y * p["scale"] + p["bias"]).astype(x.dtype)
+
+
+def time_mix_apply(p, x, x_prev, wkv_state, *, head_dim: int = 64,
+                   use_chunked: bool = True, chunk: int = 64,
+                   compute_dtype=jnp.float32):
+    """x: (B,S,D); x_prev: (B,1,D) token before x[:,0]. Returns y, new state."""
+    b, s, d = x.shape
+    h = d // head_dim
+    xs = jnp.concatenate([x_prev, x[:, :-1]], axis=1)
+    dx = xs - x
+    xxx = x + dx * p["mix_base"].astype(x.dtype).mean(0)
+    lora = jnp.tanh(xxx @ p["mix_w1"].astype(x.dtype))
+    lora = lora.reshape(b, s, 5, -1)
+    deltas = jnp.einsum("bsli,lid->bsld", lora, p["mix_w2"].astype(x.dtype))
+    mixed = x[:, :, None] + dx[:, :, None] * (p["mix_base"].astype(x.dtype) + deltas)
+    xr, xk, xv, xw, xg = [mixed[:, :, i] for i in range(5)]
+
+    r = (xr @ p["wr"]["w"].astype(x.dtype)).reshape(b, s, h, head_dim)
+    k = (xk @ p["wk"]["w"].astype(x.dtype)).reshape(b, s, h, head_dim)
+    v = (xv @ p["wv"]["w"].astype(x.dtype)).reshape(b, s, h, head_dim)
+    g = jax.nn.silu(xg @ p["wg"]["w"].astype(x.dtype))
+
+    ww = p["decay_base"].astype(jnp.float32) + (
+        jnp.tanh(xw @ p["decay_w1"].astype(x.dtype)) @ p["decay_w2"].astype(x.dtype)
+    ).astype(jnp.float32)
+    lw = -jnp.exp(ww).reshape(b, s, h, head_dim)                 # log decay <= 0
+    u = p["bonus"].astype(jnp.float32)
+
+    # sequence-parallel -> head-parallel relayout (see mamba2_block_apply)
+    r = constrain(r, "F", None, "M", None)
+    k = constrain(k, "F", None, "M", None)
+    v = constrain(v, "F", None, "M", None)
+    lw = constrain(lw, "F", None, "M", None)
+
+    r32, k32, v32 = (t.astype(jnp.float32) for t in (r, k, v))
+    if use_chunked and s % chunk == 0 and s > 1:
+        y, new_state = wkv6_chunked(r32, k32, v32, lw, u, wkv_state, chunk=chunk,
+                                    compute_dtype=compute_dtype)
+    else:
+        y, new_state = wkv6_scan(r32, k32, v32, lw, u, wkv_state)
+    y = constrain(y, "F", None, "M", None)
+    y = y.reshape(b, s, d).astype(x.dtype)
+    y = _group_norm(p["ln_x"], y, h) * g
+    return y @ p["wo"]["w"].astype(x.dtype), new_state, x[:, -1:]
+
+
+def channel_mix_apply(p, x, x_prev):
+    xs = jnp.concatenate([x_prev, x[:, :-1]], axis=1)
+    dx = xs - x
+    xk = x + dx * p["mix_k"].astype(x.dtype)
+    xr = x + dx * p["mix_r"].astype(x.dtype)
+    k = jnp.square(jax.nn.relu(xk @ p["wk"]["w"].astype(x.dtype)))
+    r = jax.nn.sigmoid(xr @ p["wr"]["w"].astype(x.dtype))
+    return r * (k @ p["wv"]["w"].astype(x.dtype)), x[:, -1:]

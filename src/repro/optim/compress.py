@@ -1,0 +1,42 @@
+"""Int8 error-feedback gradient compression for data-parallel all-reduce.
+
+Beyond-paper distributed-optimization trick: before the DP gradient
+reduction, gradients are quantized per-tensor to int8 with a fp32 scale; the
+quantization error is fed back into the next step's gradient (error
+feedback), which keeps SGD/Adam convergence (Karimireddy et al., 2019).
+Inside ``shard_map`` the int8 tensors are what crosses the ICI links, cutting
+the collective term of the roofline by ~4x vs fp32 (2x vs bf16).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def int8_compress(g):
+    """Per-tensor symmetric int8 quantization. Returns (q, scale)."""
+    amax = jnp.max(jnp.abs(g)) + 1e-12
+    scale = amax / 127.0
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def int8_decompress(q, scale):
+    return q.astype(jnp.float32) * scale
+
+
+def compress_tree(grads, error):
+    """Quantize grads+error; returns (q_tree, scale_tree, new_error_tree)."""
+    def one(g, e):
+        ge = g.astype(jnp.float32) + e
+        q, s = int8_compress(ge)
+        return q, s, ge - int8_decompress(q, s)
+    flat = jax.tree.map(one, grads, error)
+    q = jax.tree.map(lambda t: t[0], flat, is_leaf=lambda x: isinstance(x, tuple))
+    s = jax.tree.map(lambda t: t[1], flat, is_leaf=lambda x: isinstance(x, tuple))
+    err = jax.tree.map(lambda t: t[2], flat, is_leaf=lambda x: isinstance(x, tuple))
+    return q, s, err
+
+
+def decompress_tree(q, s):
+    return jax.tree.map(int8_decompress, q, s)

@@ -1,0 +1,108 @@
+"""Pytree-functional optimizers (optax is unavailable — built from scratch).
+
+An optimizer is a pair ``(init_fn, update_fn)``:
+    state = init_fn(params)
+    updates, state = update_fn(grads, state, params, lr=None)
+``lr`` may be passed dynamically at update time — this is what lets PBT treat
+the learning rate as a *vmapped per-member hyperparameter* (the paper's §5.1):
+the same compiled update step serves every member with its own lr.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple, Any
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamState(NamedTuple):
+    step: jnp.ndarray
+    mu: Any
+    nu: Any
+
+
+def global_norm(tree):
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in leaves))
+
+
+def clip_by_global_norm(tree, max_norm):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree.map(lambda x: x * scale, tree), norm
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(lambda p, u: (p + u.astype(p.dtype)), params, updates)
+
+
+def adam(lr: float = 3e-4, b1: float = 0.9, b2: float = 0.999,
+         eps: float = 1e-8, weight_decay: float = 0.0,
+         max_grad_norm: float | None = None):
+    """Adam/AdamW. ``update_fn(grads, state, params, lr=...)`` overrides lr."""
+
+    def init_fn(params):
+        zeros = lambda: jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+        return AdamState(step=jnp.zeros((), jnp.int32), mu=zeros(), nu=zeros())
+
+    def update_fn(grads, state, params=None, lr_override=None):
+        lr_t = lr if lr_override is None else lr_override
+        if max_grad_norm is not None:
+            grads, _ = clip_by_global_norm(grads, max_grad_norm)
+        step = state.step + 1
+        mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32),
+                          state.mu, grads)
+        nu = jax.tree.map(lambda n, g: b2 * n + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+                          state.nu, grads)
+        c1 = 1 - b1 ** step.astype(jnp.float32)
+        c2 = 1 - b2 ** step.astype(jnp.float32)
+
+        def upd(m, n, p):
+            u = -(lr_t * (m / c1) / (jnp.sqrt(n / c2) + eps))
+            if weight_decay:
+                u = u - lr_t * weight_decay * p.astype(jnp.float32)
+            return u
+        updates = jax.tree.map(upd, mu, nu,
+                               params if weight_decay else jax.tree.map(lambda m: m, mu))
+        return updates, AdamState(step=step, mu=mu, nu=nu)
+
+    return init_fn, update_fn
+
+
+def adamw(lr: float = 3e-4, weight_decay: float = 0.1, **kw):
+    return adam(lr=lr, weight_decay=weight_decay, **kw)
+
+
+def sgd(lr: float = 1e-2, momentum: float = 0.0):
+    def init_fn(params):
+        if momentum:
+            return jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+        return ()
+
+    def update_fn(grads, state, params=None, lr_override=None):
+        lr_t = lr if lr_override is None else lr_override
+        if momentum:
+            state = jax.tree.map(lambda v, g: momentum * v + g.astype(jnp.float32),
+                                 state, grads)
+            return jax.tree.map(lambda v: -lr_t * v, state), state
+        return jax.tree.map(lambda g: -lr_t * g.astype(jnp.float32), grads), state
+
+    return init_fn, update_fn
+
+
+def cosine_schedule(base_lr: float, total_steps: int, final_frac: float = 0.1):
+    def lr_at(step):
+        t = jnp.minimum(step.astype(jnp.float32), total_steps) / total_steps
+        return base_lr * (final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t)))
+    return lr_at
+
+
+def warmup_cosine(base_lr: float, warmup_steps: int, total_steps: int,
+                  final_frac: float = 0.1):
+    cos = cosine_schedule(base_lr, max(total_steps - warmup_steps, 1), final_frac)
+    def lr_at(step):
+        step = step.astype(jnp.float32)
+        warm = base_lr * step / max(warmup_steps, 1)
+        return jnp.where(step < warmup_steps, warm, cos(step - warmup_steps))
+    return lr_at

@@ -1,0 +1,1 @@
+from repro.rl import td3, sac, dqn  # noqa: F401

@@ -1,0 +1,70 @@
+"""DQN (Mnih et al., 2013) — population-vectorizable.
+
+Dynamic hyperparameters: lr, discount, epsilon (exploration).
+``conv_torso=True`` gives the Atari CNN parametrization from the paper's
+Fig. 2 DQN study; the MLP variant drives the pure-JAX cartpole env.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim import adam, apply_updates
+from repro.rl import networks as nets
+
+DEFAULT_HYPERS = {"lr": 1e-4, "discount": 0.99, "epsilon": 0.05}
+TARGET_UPDATE_EVERY = 100
+
+_opt_init, _opt_update = adam(1e-4)
+
+
+class DQNState(NamedTuple):
+    q: Any
+    target_q: Any
+    opt: Any
+    step: jnp.ndarray
+    key: jnp.ndarray
+
+
+def init(key, obs_dim: int, num_actions: int, conv_torso: bool = False) -> DQNState:
+    kq, kk = jax.random.split(key)
+    q = nets.q_net_init(kq, obs_dim, num_actions, conv_torso=conv_torso)
+    return DQNState(q=q, target_q=jax.tree.map(jnp.copy, q),
+                    opt=_opt_init(q), step=jnp.zeros((), jnp.int32), key=kk)
+
+
+def policy(q_params, obs, key=None, epsilon: float = 0.05):
+    qvals = nets.q_net_apply(q_params, obs)
+    greedy = jnp.argmax(qvals, axis=-1)
+    if key is None:
+        return greedy
+    kr, ka = jax.random.split(key)
+    rand = jax.random.randint(ka, greedy.shape, 0, qvals.shape[-1])
+    return jnp.where(jax.random.uniform(kr, greedy.shape) < epsilon, rand, greedy)
+
+
+def update(state: DQNState, batch, hypers=None) -> tuple[DQNState, dict]:
+    h = dict(DEFAULT_HYPERS)
+    if hypers:
+        h.update(hypers)
+    key, _ = jax.random.split(state.key)
+
+    def loss_fn(q):
+        qvals = nets.q_net_apply(q, batch["obs"])
+        qa = jnp.take_along_axis(qvals, batch["action"][..., None].astype(jnp.int32),
+                                 axis=-1)[..., 0]
+        tq = nets.q_net_apply(state.target_q, batch["next_obs"])
+        target = batch["reward"] + h["discount"] * (1 - batch["done"]) * \
+            jnp.max(tq, axis=-1)
+        return jnp.mean((qa - jax.lax.stop_gradient(target)) ** 2)
+
+    loss, grads = jax.value_and_grad(loss_fn)(state.q)
+    upd, opt = _opt_update(grads, state.opt, lr_override=h["lr"])
+    q = apply_updates(state.q, upd)
+    step = state.step + 1
+    sync = (step % TARGET_UPDATE_EVERY) == 0
+    target_q = jax.tree.map(lambda t, o: jnp.where(sync, o, t), state.target_q, q)
+    return DQNState(q=q, target_q=target_q, opt=opt, step=step, key=key), \
+        {"loss": loss}

@@ -1,0 +1,71 @@
+"""Actor/critic networks for SAC/TD3/DQN (the paper's MLP parametrizations).
+
+Standard sizes from Haarnoja et al. / Fujimoto et al.: 256-256 MLPs.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.basic import mlp_init, mlp_apply, dqn_torso_init, dqn_torso_apply
+
+
+HIDDEN = (256, 256)
+
+
+def actor_init(key, obs_dim: int, act_dim: int, hidden=HIDDEN):
+    return mlp_init(key, [obs_dim, *hidden, act_dim])
+
+
+def actor_apply(params, obs):
+    return jnp.tanh(mlp_apply(params, obs))
+
+
+def gaussian_actor_init(key, obs_dim: int, act_dim: int, hidden=HIDDEN):
+    return mlp_init(key, [obs_dim, *hidden, 2 * act_dim])
+
+
+def gaussian_actor_apply(params, obs):
+    out = mlp_apply(params, obs)
+    mean, log_std = jnp.split(out, 2, axis=-1)
+    log_std = jnp.clip(log_std, -20.0, 2.0)
+    return mean, log_std
+
+
+def sample_squashed(key, mean, log_std):
+    """Tanh-squashed gaussian sample + log-prob (SAC)."""
+    std = jnp.exp(log_std)
+    eps = jax.random.normal(key, mean.shape)
+    pre = mean + std * eps
+    act = jnp.tanh(pre)
+    logp = jnp.sum(
+        -0.5 * (eps ** 2 + 2 * log_std + jnp.log(2 * jnp.pi))
+        - jnp.log(jnp.maximum(1 - act ** 2, 1e-6)), axis=-1)
+    return act, logp
+
+
+def critic_init(key, obs_dim: int, act_dim: int, hidden=HIDDEN):
+    k1, k2 = jax.random.split(key)
+    return {"q1": mlp_init(k1, [obs_dim + act_dim, *hidden, 1]),
+            "q2": mlp_init(k2, [obs_dim + act_dim, *hidden, 1])}
+
+
+def critic_apply(params, obs, act):
+    x = jnp.concatenate([obs, act], axis=-1)
+    return (mlp_apply(params["q1"], x)[..., 0],
+            mlp_apply(params["q2"], x)[..., 0])
+
+
+def q_net_init(key, obs_dim: int, num_actions: int, hidden=HIDDEN,
+               conv_torso: bool = False):
+    if conv_torso:  # Atari-style: 84x84x4 frames
+        k1, k2 = jax.random.split(key)
+        return {"torso": dqn_torso_init(k1),
+                "head": mlp_init(k2, [3136, 512, num_actions])}
+    return {"head": mlp_init(key, [obs_dim, *hidden, num_actions])}
+
+
+def q_net_apply(params, obs):
+    if "torso" in params:
+        obs = dqn_torso_apply(params["torso"], obs)
+    return mlp_apply(params["head"], obs)

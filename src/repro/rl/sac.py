@@ -1,0 +1,113 @@
+"""SAC (Haarnoja et al., 2018) with learned temperature — population-ready.
+
+PBT-tunable dynamic hyperparameters (paper §B.1): actor_lr, critic_lr,
+alpha_lr, target_entropy scale, reward_scale, discount.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim import adam, apply_updates
+from repro.rl import networks as nets
+
+DEFAULT_HYPERS = {
+    "actor_lr": 3e-4, "critic_lr": 3e-4, "alpha_lr": 3e-4,
+    "target_entropy_scale": 1.0, "reward_scale": 1.0, "discount": 0.99,
+}
+TAU = 0.005
+
+_opt_init, _opt_update = adam(3e-4)
+
+
+class SACState(NamedTuple):
+    actor: Any
+    critic: Any
+    target_critic: Any
+    log_alpha: jnp.ndarray
+    actor_opt: Any
+    critic_opt: Any
+    alpha_opt: Any
+    step: jnp.ndarray
+    key: jnp.ndarray
+
+
+def init(key, obs_dim: int, act_dim: int) -> SACState:
+    ka, kc, kk = jax.random.split(key, 3)
+    actor = nets.gaussian_actor_init(ka, obs_dim, act_dim)
+    critic = nets.critic_init(kc, obs_dim, act_dim)
+    log_alpha = jnp.zeros(())
+    return SACState(actor=actor, critic=critic,
+                    target_critic=jax.tree.map(jnp.copy, critic),
+                    log_alpha=log_alpha,
+                    actor_opt=_opt_init(actor), critic_opt=_opt_init(critic),
+                    alpha_opt=_opt_init(log_alpha),
+                    step=jnp.zeros((), jnp.int32), key=kk)
+
+
+def policy(actor_params, obs, key=None):
+    mean, log_std = nets.gaussian_actor_apply(actor_params, obs)
+    if key is None:
+        return jnp.tanh(mean)
+    act, _ = nets.sample_squashed(key, mean, log_std)
+    return act
+
+
+def update(state: SACState, batch, hypers=None) -> tuple[SACState, dict]:
+    h = dict(DEFAULT_HYPERS)
+    if hypers:
+        h.update(hypers)
+    act_dim = batch["action"].shape[-1]
+    target_entropy = -h["target_entropy_scale"] * act_dim
+    key, k1, k2 = jax.random.split(state.key, 3)
+    alpha = jnp.exp(state.log_alpha)
+    reward = batch["reward"] * h["reward_scale"]
+
+    # critic
+    def critic_loss(critic):
+        mean, log_std = nets.gaussian_actor_apply(state.actor, batch["next_obs"])
+        next_a, next_logp = nets.sample_squashed(k1, mean, log_std)
+        tq1, tq2 = nets.critic_apply(state.target_critic, batch["next_obs"], next_a)
+        target = reward + h["discount"] * (1 - batch["done"]) * (
+            jnp.minimum(tq1, tq2) - alpha * next_logp)
+        q1, q2 = nets.critic_apply(critic, batch["obs"], batch["action"])
+        target = jax.lax.stop_gradient(target)
+        return jnp.mean((q1 - target) ** 2) + jnp.mean((q2 - target) ** 2)
+
+    closs, cgrads = jax.value_and_grad(critic_loss)(state.critic)
+    cupd, critic_opt = _opt_update(cgrads, state.critic_opt,
+                                   lr_override=h["critic_lr"])
+    critic = apply_updates(state.critic, cupd)
+
+    # actor
+    def actor_loss(actor):
+        mean, log_std = nets.gaussian_actor_apply(actor, batch["obs"])
+        a, logp = nets.sample_squashed(k2, mean, log_std)
+        q1, q2 = nets.critic_apply(critic, batch["obs"], a)
+        return jnp.mean(alpha * logp - jnp.minimum(q1, q2)), logp
+
+    (aloss, logp), agrads = jax.value_and_grad(actor_loss, has_aux=True)(state.actor)
+    aupd, actor_opt = _opt_update(agrads, state.actor_opt,
+                                  lr_override=h["actor_lr"])
+    actor = apply_updates(state.actor, aupd)
+
+    # temperature
+    def alpha_loss(log_alpha):
+        return -jnp.mean(jnp.exp(log_alpha) *
+                         jax.lax.stop_gradient(logp + target_entropy))
+
+    l_loss, lgrad = jax.value_and_grad(alpha_loss)(state.log_alpha)
+    lupd, alpha_opt = _opt_update(lgrad, state.alpha_opt,
+                                  lr_override=h["alpha_lr"])
+    log_alpha = state.log_alpha + lupd
+
+    target_critic = jax.tree.map(lambda t, o: (1 - TAU) * t + TAU * o,
+                                 state.target_critic, critic)
+    new_state = SACState(actor=actor, critic=critic,
+                         target_critic=target_critic, log_alpha=log_alpha,
+                         actor_opt=actor_opt, critic_opt=critic_opt,
+                         alpha_opt=alpha_opt, step=state.step + 1, key=key)
+    return new_state, {"critic_loss": closs, "actor_loss": aloss,
+                       "alpha": jnp.exp(log_alpha)}

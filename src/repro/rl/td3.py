@@ -1,0 +1,122 @@
+"""TD3 (Fujimoto et al., 2018) — functional, population-vectorizable.
+
+Every hyperparameter the paper's PBT study tunes (§B.1) is a *dynamic* input
+(the ``hypers`` dict), so one compiled update step serves all members with
+their own values under ``vmap``:
+    actor_lr, critic_lr, policy_freq (0.2..1), noise, discount.
+The delayed-policy-update trick is expressed as the fractional-frequency
+gate ``floor(step*f) > floor((step-1)*f)`` which is vmappable (no python
+control flow).
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim import adam, apply_updates
+from repro.rl import networks as nets
+
+
+DEFAULT_HYPERS = {
+    "actor_lr": 3e-4, "critic_lr": 3e-4, "policy_freq": 0.5,
+    "noise": 0.2, "discount": 0.99,
+}
+NOISE_CLIP = 0.5
+TAU = 0.005
+
+_opt_init, _opt_update = adam(3e-4)
+
+
+class TD3State(NamedTuple):
+    actor: Any
+    critic: Any
+    target_actor: Any
+    target_critic: Any
+    actor_opt: Any
+    critic_opt: Any
+    step: jnp.ndarray
+    key: jnp.ndarray
+
+
+def init(key, obs_dim: int, act_dim: int) -> TD3State:
+    ka, kc, kk = jax.random.split(key, 3)
+    actor = nets.actor_init(ka, obs_dim, act_dim)
+    critic = nets.critic_init(kc, obs_dim, act_dim)
+    return TD3State(
+        actor=actor, critic=critic,
+        target_actor=jax.tree.map(jnp.copy, actor),
+        target_critic=jax.tree.map(jnp.copy, critic),
+        actor_opt=_opt_init(actor), critic_opt=_opt_init(critic),
+        step=jnp.zeros((), jnp.int32), key=kk)
+
+
+def policy(actor_params, obs, key=None, exploration_noise: float = 0.1):
+    a = nets.actor_apply(actor_params, obs)
+    if key is not None:
+        a = jnp.clip(a + exploration_noise * jax.random.normal(key, a.shape),
+                     -1.0, 1.0)
+    return a
+
+
+def critic_loss_fn(critic, target_actor, target_critic, batch, key, hypers):
+    noise = jnp.clip(
+        hypers["noise"] * jax.random.normal(key, batch["action"].shape),
+        -NOISE_CLIP, NOISE_CLIP)
+    next_a = jnp.clip(nets.actor_apply(target_actor, batch["next_obs"]) + noise,
+                      -1.0, 1.0)
+    tq1, tq2 = nets.critic_apply(target_critic, batch["next_obs"], next_a)
+    target = batch["reward"] + hypers["discount"] * (1 - batch["done"]) * \
+        jnp.minimum(tq1, tq2)
+    q1, q2 = nets.critic_apply(critic, batch["obs"], batch["action"])
+    target = jax.lax.stop_gradient(target)
+    return jnp.mean((q1 - target) ** 2) + jnp.mean((q2 - target) ** 2)
+
+
+def actor_loss_fn(actor, critic, batch):
+    a = nets.actor_apply(actor, batch["obs"])
+    q1, _ = nets.critic_apply(critic, batch["obs"], a)
+    return -jnp.mean(q1)
+
+
+def _soft_update(target, online, tau=TAU):
+    return jax.tree.map(lambda t, o: (1 - tau) * t + tau * o, target, online)
+
+
+def update(state: TD3State, batch, hypers=None) -> tuple[TD3State, dict]:
+    """One TD3 update step (critic always; actor at frequency policy_freq)."""
+    h = dict(DEFAULT_HYPERS)
+    if hypers:
+        h.update(hypers)
+    key, kc = jax.random.split(state.key)
+
+    closs, cgrads = jax.value_and_grad(critic_loss_fn)(
+        state.critic, state.target_actor, state.target_critic, batch, kc, h)
+    cupd, critic_opt = _opt_update(cgrads, state.critic_opt,
+                                   lr_override=h["critic_lr"])
+    critic = apply_updates(state.critic, cupd)
+
+    # fractional-frequency delayed actor update (vmappable gate)
+    f = h["policy_freq"]
+    step_f = state.step.astype(jnp.float32)
+    do_actor = jnp.floor((step_f + 1) * f) > jnp.floor(step_f * f)
+
+    aloss, agrads = jax.value_and_grad(actor_loss_fn)(
+        state.actor, critic, batch)
+    aupd, actor_opt_new = _opt_update(agrads, state.actor_opt,
+                                      lr_override=h["actor_lr"])
+    actor_new = apply_updates(state.actor, aupd)
+
+    sel = lambda new, old: jax.tree.map(
+        lambda n, o: jnp.where(do_actor, n, o), new, old)
+    actor = sel(actor_new, state.actor)
+    actor_opt = sel(actor_opt_new, state.actor_opt)
+    target_actor = sel(_soft_update(state.target_actor, actor),
+                       state.target_actor)
+    target_critic = _soft_update(state.target_critic, critic)
+
+    new_state = TD3State(actor=actor, critic=critic, target_actor=target_actor,
+                         target_critic=target_critic, actor_opt=actor_opt,
+                         critic_opt=critic_opt, step=state.step + 1, key=key)
+    return new_state, {"critic_loss": closs, "actor_loss": aloss}

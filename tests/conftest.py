@@ -1,0 +1,6 @@
+import os
+import sys
+
+# Smoke tests and benches must see ONE device; only launch/dryrun.py forces
+# 512 placeholder devices (per DESIGN.md) — never set that flag here.
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

@@ -1,0 +1,83 @@
+"""Elastic re-layout: checkpoint on one mesh, resume on a smaller one."""
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch.elastic import plan_mesh, shrink_population
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def test_plan_mesh_shapes():
+    # helper is pure math until make_mesh; just check the chosen grid
+    for n, model, want in [(512, 16, (32, 16)), (256, 16, (16, 16)),
+                           (8, 16, (1, 8)), (6, 16, (3, 2)), (1, 16, (1, 1))]:
+        m = model
+        while m > 1 and (n % m or n // m < 1):
+            m //= 2
+        assert (n // m, m) == want, (n, model)
+
+
+def test_shrink_population_keeps_fittest():
+    pop = {"w": jnp.arange(8.0)[:, None] * jnp.ones((8, 3))}
+    fitness = jnp.asarray([3., 9., 1., 7., 5., 0., 8., 2.])
+    small, keep = shrink_population(pop, fitness, 4)
+    assert small["w"].shape == (4, 3)
+    assert set(keep.tolist()) == {1, 3, 4, 6}  # top-4 by fitness
+
+
+SCRIPT = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=%d"
+import sys, json
+import jax, jax.numpy as jnp
+import numpy as np
+from repro.checkpoint import CheckpointManager
+from repro.configs import get_config, TrainConfig
+from repro.launch.elastic import plan_mesh, relayout
+from repro.models import lm as L
+
+phase, ckpt_dir = sys.argv[1], sys.argv[2]
+cfg = get_config("qwen2_0_5b").smoke()
+mesh = plan_mesh(len(jax.devices()), preferred_model=2)
+mgr = CheckpointManager(ckpt_dir, keep=2)
+key = jax.random.PRNGKey(0)
+template = L.init_params(key, cfg)
+if phase == "save":
+    params = relayout(template, mesh)
+    mgr.save(10, params, {"loss": 1.23})
+    print(json.dumps({"mesh": dict(mesh.shape),
+                      "ok": True}))
+else:
+    params, extra = mgr.restore(template)
+    params = relayout(params, mesh)   # new (smaller) mesh
+    batch = {"tokens": jax.random.randint(key, (2, 32), 0, cfg.vocab_size)}
+    with jax.sharding.set_mesh(mesh):
+        loss, _ = L.lm_loss(params, cfg, batch)
+    print(json.dumps({"mesh": dict(mesh.shape), "step": extra["step"],
+                      "loss": float(loss), "ok": bool(np.isfinite(float(loss)))}))
+"""
+
+
+@pytest.mark.slow
+def test_checkpoint_relayout_across_device_counts(tmp_path):
+    def run(devices, phase):
+        env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"),
+                   XLA_FLAGS=f"--xla_force_host_platform_device_count={devices}")
+        r = subprocess.run([sys.executable, "-c", SCRIPT % devices, phase,
+                            str(tmp_path)], env=env, capture_output=True,
+                           text=True, timeout=600)
+        assert r.returncode == 0, r.stderr[-2000:]
+        return json.loads(r.stdout.strip().splitlines()[-1])
+
+    out1 = run(8, "save")          # "cluster" of 8 devices
+    assert out1["ok"]
+    out2 = run(4, "load")          # half the nodes survive
+    assert out2["ok"] and out2["step"] == 10
+    assert out2["mesh"] == {"data": 2, "model": 2}

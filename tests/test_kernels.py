@@ -1,0 +1,126 @@
+"""Per-kernel shape/dtype sweeps vs the pure-jnp oracles (interpret mode)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+KEY = jax.random.PRNGKey(0)
+
+TOL = {jnp.float32: dict(atol=2e-4, rtol=2e-4),
+       jnp.bfloat16: dict(atol=0.15, rtol=0.1)}
+
+
+@pytest.mark.parametrize("n,b,k,m", [(2, 64, 32, 64), (5, 128, 128, 256),
+                                     (1, 256, 64, 128)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("act", ["none", "relu", "tanh"])
+def test_pop_matmul_sweep(n, b, k, m, dtype, act):
+    ks = jax.random.split(KEY, 3)
+    x = jax.random.normal(ks[0], (n, b, k), dtype)
+    w = jax.random.normal(ks[1], (n, k, m), dtype) / np.sqrt(k)
+    bias = jax.random.normal(ks[2], (n, m), dtype)
+    y = ops.pop_matmul(x, w, bias, activation=act, interpret=True)
+    yr = ref.pop_matmul_ref(x, w, bias, activation=act)
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(yr, np.float32), **TOL[dtype])
+
+
+@pytest.mark.parametrize("b,h,hkv,s,d", [(1, 4, 4, 128, 32), (2, 8, 2, 256, 64),
+                                         (1, 6, 1, 512, 64)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_sweep(b, h, hkv, s, d, dtype):
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (b, h, s, d), dtype)
+    k = jax.random.normal(ks[1], (b, hkv, s, d), dtype)
+    v = jax.random.normal(ks[2], (b, hkv, s, d), dtype)
+    o = ops.flash_attention(q, k, v, interpret=True)
+    orf = ref.flash_attention_ref(q, k, v)
+    np.testing.assert_allclose(np.asarray(o, np.float32),
+                               np.asarray(orf, np.float32), **TOL[dtype])
+
+
+def test_flash_attention_non_causal():
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (1, 2, 128, 32))
+    k = jax.random.normal(ks[1], (1, 2, 128, 32))
+    v = jax.random.normal(ks[2], (1, 2, 128, 32))
+    o = ops.flash_attention(q, k, v, causal=False, interpret=True)
+    orf = ref.flash_attention_ref(q, k, v, causal=False)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(orf), atol=2e-4)
+
+
+@pytest.mark.parametrize("b,h,s,d,chunk", [(1, 2, 64, 8, 16), (2, 3, 128, 16, 32),
+                                           (1, 1, 256, 32, 64)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_wkv6_sweep(b, h, s, d, chunk, dtype):
+    ks = jax.random.split(KEY, 6)
+    r, k, v = (jax.random.normal(ks[i], (b, h, s, d), dtype) for i in range(3))
+    lw = -jnp.exp(jax.random.normal(ks[3], (b, h, s, d)) * 0.5 - 2.0)
+    u = (jax.random.normal(ks[4], (h, d)) * 0.3)
+    s0 = jax.random.normal(ks[5], (b, h, d, d)) * 0.1
+    y, sf = ops.wkv6(r, k, v, lw, u, s0, chunk=chunk, interpret=True)
+    yr, sr = ref.wkv6_ref(r, k, v, lw, u, s0)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr, np.float32),
+                               **TOL[dtype])
+    np.testing.assert_allclose(np.asarray(sf), np.asarray(sr, np.float32),
+                               **TOL[dtype])
+
+
+@pytest.mark.parametrize("b,h,s,p,n,chunk", [(1, 2, 64, 8, 4, 16),
+                                             (2, 4, 128, 16, 8, 32),
+                                             (1, 1, 256, 64, 64, 64)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_ssd_sweep(b, h, s, p, n, chunk, dtype):
+    ks = jax.random.split(KEY, 6)
+    x = jax.random.normal(ks[0], (b, h, s, p), dtype)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, h, s)))
+    a = -jnp.exp(jax.random.normal(ks[2], (h,)) * 0.3)
+    bb = jax.random.normal(ks[3], (b, s, n), dtype)
+    cc = jax.random.normal(ks[4], (b, s, n), dtype)
+    h0 = jax.random.normal(ks[5], (b, h, p, n)) * 0.1
+    y, sf = ops.ssd(x, dt, a, bb, cc, h0, chunk=chunk, interpret=True)
+    yr, sr = ref.ssd_ref(x, dt, a, bb, cc, h0)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr, np.float32),
+                               **TOL[dtype])
+    np.testing.assert_allclose(np.asarray(sf), np.asarray(sr, np.float32),
+                               **TOL[dtype])
+
+
+@pytest.mark.parametrize("n,psize,block", [(2, 64, 64), (4, 8192, 4096),
+                                           (1, 128, 32)])
+def test_pop_adam_sweep(n, psize, block):
+    ks = jax.random.split(KEY, 4)
+    params = jax.random.normal(ks[0], (n, psize))
+    grads = jax.random.normal(ks[1], (n, psize))
+    mu = jax.random.normal(ks[2], (n, psize)) * 0.1
+    nu = jnp.abs(jax.random.normal(ks[3], (n, psize))) * 0.01
+    lr = jnp.linspace(1e-4, 3e-3, n)
+    step = jnp.asarray(7, jnp.int32)
+    from repro.kernels.pop_adam import pop_adam
+    p2, m2, v2 = pop_adam(params, grads, mu, nu, lr, step, block=block,
+                          interpret=True)
+    pr, mr, vr = ref.pop_adam_ref(params, grads, mu, nu, lr, step)
+    np.testing.assert_allclose(np.asarray(p2), np.asarray(pr), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(m2), np.asarray(mr), atol=1e-6)
+    np.testing.assert_allclose(np.asarray(v2), np.asarray(vr), atol=1e-6)
+
+
+def test_grad_accum_equivalence():
+    """tcfg.grad_accum microbatching == full-batch step (fp32 accumulate)."""
+    from repro.configs import get_config, TrainConfig
+    from repro.models import lm as L
+    cfg = get_config("qwen2_0_5b").smoke()
+    params = L.init_params(KEY, cfg)
+    batch = {"tokens": jax.random.randint(KEY, (4, 32), 0, cfg.vocab_size)}
+    outs = {}
+    for ga in (1, 4):
+        oi, ts = L.make_train_step(cfg, TrainConfig(
+            total_steps=10, warmup_steps=0, grad_accum=ga))
+        p2, _, m = jax.jit(ts)(params, oi(params), batch, jnp.asarray(1))
+        outs[ga] = (float(m["loss"]), p2)
+    assert abs(outs[1][0] - outs[4][0]) < 1e-5
+    err = max(float(jnp.max(jnp.abs(a - b))) for a, b in zip(
+        jax.tree.leaves(outs[1][1]), jax.tree.leaves(outs[4][1])))
+    assert err < 1e-4

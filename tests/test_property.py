@@ -1,0 +1,104 @@
+"""Property-based tests (hypothesis) on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.base import HyperSpace, PopulationConfig
+from repro.core import pbt_step, sample_hypers
+from repro.data import buffer_add, buffer_init, buffer_sample
+from repro.optim.compress import int8_compress, int8_decompress
+from repro.nn.rwkv6 import wkv6_chunked, wkv6_scan
+
+SPACE = HyperSpace(log_uniform=(("lr", 1e-5, 1e-2),),
+                   uniform=(("discount", 0.9, 1.0),))
+
+
+@settings(deadline=None, max_examples=25)
+@given(st.integers(2, 16), st.integers(0, 1000),
+       st.floats(0.1, 0.49))
+def test_pbt_invariants(n, seed, frac):
+    """Population size preserved; survivors keep their own state; replaced
+    members' parents come from the top-k; hypers stay in bounds."""
+    key = jax.random.PRNGKey(seed)
+    pop = {"w": jax.random.normal(key, (n, 3))}
+    hypers = sample_hypers(key, SPACE, n)
+    fitness = jax.random.normal(jax.random.fold_in(key, 1), (n,))
+    pcfg = PopulationConfig(size=n, exploit_frac=frac, hyper_space=SPACE)
+    new_pop, new_h, parents = pbt_step(key, pop, hypers, fitness, pcfg)
+    parents = np.asarray(parents)
+    k = max(1, int(round(n * frac)))
+    order = np.argsort(np.asarray(fitness))
+    bottom, top = set(order[:k]), set(order[-k:])
+    assert new_pop["w"].shape == (n, 3)
+    for i in range(n):
+        if i in bottom:
+            assert parents[i] in top
+        else:
+            assert parents[i] == i
+        np.testing.assert_allclose(np.asarray(new_pop["w"][i]),
+                                   np.asarray(pop["w"][parents[i]]))
+    for name, lo, hi in SPACE.log_uniform + SPACE.uniform:
+        vals = np.asarray(new_h[name])
+        assert (vals >= lo - 1e-9).all() and (vals <= hi + 1e-9).all()
+
+
+@settings(deadline=None, max_examples=20)
+@given(st.integers(1, 8), st.integers(1, 40), st.integers(0, 100))
+def test_replay_buffer_fifo_matches_numpy_oracle(cap_mul, n_items, seed):
+    capacity = 8 * cap_mul
+    rng = np.random.default_rng(seed)
+    items = rng.normal(size=(n_items, 3)).astype(np.float32)
+    buf = buffer_init(capacity, {"x": jnp.zeros((3,), jnp.float32)})
+    oracle = np.zeros((capacity, 3), np.float32)
+    pos = 0
+    for i in range(0, n_items, 4):
+        chunk = items[i:i + 4]
+        buf = buffer_add(buf, {"x": jnp.asarray(chunk)})
+        for row in chunk:
+            oracle[pos % capacity] = row
+            pos += 1
+    np.testing.assert_allclose(np.asarray(buf.data["x"]), oracle)
+    assert int(buf.insert_pos) == pos % capacity
+    assert int(buf.total) == n_items - n_items % 1
+    # samples only come from valid region
+    if n_items >= 4:
+        s = buffer_sample(buf, jax.random.PRNGKey(seed), 16)
+        valid = oracle[:min(pos, capacity)]
+        for row in np.asarray(s["x"]):
+            assert any(np.allclose(row, v) for v in valid)
+
+
+@settings(deadline=None, max_examples=30)
+@given(st.integers(0, 1000), st.floats(1e-3, 1e3))
+def test_int8_compress_error_bound(seed, scale):
+    g = scale * jax.random.normal(jax.random.PRNGKey(seed), (64,))
+    q, s = int8_compress(g)
+    err = jnp.max(jnp.abs(int8_decompress(q, s) - g))
+    amax = float(jnp.max(jnp.abs(g)))
+    assert float(err) <= amax / 127.0 + 1e-6
+
+
+@settings(deadline=None, max_examples=10)
+@given(st.integers(0, 50), st.sampled_from([16, 32]), st.sampled_from([1, 2]))
+def test_wkv6_chunked_equals_scan_property(seed, chunk, h):
+    b, s, d = 1, 64, 8
+    ks = jax.random.split(jax.random.PRNGKey(seed), 6)
+    r, k, v = (jax.random.normal(ks[i], (b, s, h, d)) for i in range(3))
+    lw = -jnp.exp(jax.random.normal(ks[3], (b, s, h, d)) - 2.0)
+    u = jax.random.normal(ks[4], (h, d)) * 0.3
+    st0 = jax.random.normal(ks[5], (b, h, d, d)) * 0.1
+    y1, s1 = wkv6_scan(r, k, v, lw, u, st0)
+    y2, s2 = wkv6_chunked(r, k, v, lw, u, st0, chunk=chunk)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=2e-4)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), atol=2e-4)
+
+
+@settings(deadline=None, max_examples=15)
+@given(st.integers(0, 200))
+def test_hyper_sampling_within_prior(seed):
+    h = sample_hypers(jax.random.PRNGKey(seed), SPACE, 16)
+    assert (np.asarray(h["lr"]) >= 1e-5).all()
+    assert (np.asarray(h["lr"]) <= 1e-2).all()
+    assert (np.asarray(h["discount"]) >= 0.9).all()
+    assert (np.asarray(h["discount"]) <= 1.0).all()

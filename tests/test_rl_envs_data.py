@@ -1,0 +1,113 @@
+"""RL agents, pure-JAX envs, replay buffer, data pipeline."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data import (DoubleBuffer, Prefetcher, buffer_add, buffer_init,
+                        buffer_sample, host_batches)
+from repro.envs import make, rollout
+from repro.rl import dqn, sac, td3
+
+KEY = jax.random.PRNGKey(0)
+
+
+def test_envs_step_shapes_and_reset():
+    for name in ("pendulum", "reacher", "cartpole"):
+        env = make(name)
+        state, obs = env.reset(KEY)
+        assert obs.shape == (env.spec.obs_dim,)
+        if env.spec.discrete:
+            action = jnp.zeros((), jnp.int32)
+        else:
+            action = jnp.zeros((env.spec.act_dim,))
+        state, obs, reward, done = env.step(state, action)
+        assert obs.shape == (env.spec.obs_dim,)
+        assert jnp.isfinite(reward)
+
+
+def test_env_vmappable_over_population():
+    env = make("pendulum")
+    keys = jax.random.split(KEY, 8)
+    states, obs = jax.vmap(env.reset)(keys)
+    actions = jnp.zeros((8, 1))
+    states, obs, rew, done = jax.vmap(env.step)(states, actions)
+    assert obs.shape == (8, 3) and rew.shape == (8,)
+
+
+def test_episode_auto_resets():
+    env = make("reacher")
+    state, obs = env.reset(KEY)
+    step = jax.jit(env.step)
+    for _ in range(105):  # episode length 100
+        state, obs, r, done = step(state, jnp.ones((2,)))
+    assert int(state["t"]) <= 100
+
+
+def test_rollout_and_agents_improve_loss():
+    env = make("pendulum")
+    agent = td3.init(KEY, env.spec.obs_dim, env.spec.act_dim)
+    traj = jax.jit(lambda p, k: rollout(
+        env, lambda pp, o, kk: td3.policy(pp, o, kk), p, k, 64))(
+            agent.actor, KEY)
+    assert traj["obs"].shape == (64, 3)
+    batch = {k: v for k, v in traj.items()}
+    upd = jax.jit(td3.update)
+    losses = []
+    st = agent
+    for i in range(20):
+        st, m = upd(st, batch, None)
+        losses.append(float(m["critic_loss"]))
+    assert losses[-1] < losses[0]
+
+
+def test_sac_dqn_single_updates():
+    b = {"obs": jax.random.normal(KEY, (8, 3)),
+         "action": jax.random.uniform(KEY, (8, 1), minval=-1, maxval=1),
+         "reward": jnp.ones((8,)), "next_obs": jax.random.normal(KEY, (8, 3)),
+         "done": jnp.zeros((8,))}
+    s = sac.init(KEY, 3, 1)
+    s, m = jax.jit(sac.update)(s, b, None)
+    assert np.isfinite(float(m["critic_loss"]))
+    d = dqn.init(KEY, 4, 2)
+    bd = dict(b, obs=jax.random.normal(KEY, (8, 4)),
+              next_obs=jax.random.normal(KEY, (8, 4)),
+              action=jnp.zeros((8,), jnp.int32))
+    d, md = jax.jit(dqn.update)(d, bd, None)
+    assert np.isfinite(float(md["loss"]))
+
+
+def test_replay_buffer_population_vmap():
+    n, cap = 3, 32
+    bufs = jax.vmap(lambda _: buffer_init(
+        cap, {"x": jnp.zeros((2,), jnp.float32)}))(jnp.arange(n))
+    batch = {"x": jax.random.normal(KEY, (n, 4, 2))}
+    bufs = jax.vmap(buffer_add)(bufs, batch)
+    assert int(bufs.total[0]) == 4
+    keys = jax.random.split(KEY, n)
+    samples = jax.vmap(lambda b, k: buffer_sample(b, k, 8))(bufs, keys)
+    assert samples["x"].shape == (n, 8, 2)
+
+
+def test_lm_pipeline_deterministic_and_resumable():
+    g1 = host_batches(100, 2, 16, seed=7, shard=0)
+    g2 = host_batches(100, 2, 16, seed=7, shard=0)
+    a, b = next(g1), next(g2)
+    np.testing.assert_array_equal(a, b)
+    # restart stability: start_step=1 reproduces the second batch
+    second = next(g1)
+    g3 = host_batches(100, 2, 16, seed=7, shard=0, start_step=1)
+    np.testing.assert_array_equal(second, next(g3))
+    # different shards differ
+    g4 = host_batches(100, 2, 16, seed=7, shard=1)
+    assert not np.array_equal(a, next(g4))
+
+
+def test_prefetcher_and_double_buffer():
+    it = iter(range(100))
+    pf = Prefetcher(lambda: np.asarray([next(it)]), depth=2)
+    vals = [int(next(pf)[0]) for _ in range(5)]
+    assert vals == [0, 1, 2, 3, 4]
+    pf.close()
+    db = DoubleBuffer(iter([np.ones(2), np.zeros(2), np.ones(2)]))
+    out = next(db)
+    assert isinstance(out, jax.Array)

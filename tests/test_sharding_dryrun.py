@@ -1,0 +1,97 @@
+"""Sharding rules + a dry-run-lite pass (8 host devices in a subprocess —
+exactly the production dryrun.py code path, reduced mesh)."""
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_config
+from repro.launch.mesh import make_production_mesh  # safe: function, no state
+from repro.models import lm as L
+from repro.models.sharding import batch_spec, param_specs, spec_for
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+class FakeMesh:
+    axis_names = ("pod", "data", "model")
+    shape = {"pod": 2, "data": 16, "model": 16}
+
+
+def test_spec_rules():
+    m = FakeMesh()
+    assert spec_for("segments.dense.attn.wq.w", (36, 4096, 4096), m) == \
+        P(None, ("pod", "data"), "model")
+    assert spec_for("segments.dense.attn.wo.w", (36, 4096, 4096), m) == \
+        P(None, "model", ("pod", "data"))
+    assert spec_for("segments.moe.mlp.experts.w_gate", (48, 128, 2048, 768), m) == \
+        P(None, "model", ("pod", "data"), None)
+    assert spec_for("embed.embedding", (151936, 896), m) == \
+        P("model", ("pod", "data"))
+    # lm_head: vocab over model
+    assert spec_for("lm_head.w", (896, 151936), m) == \
+        P(("pod", "data"), "model")
+    # non-dividing dims fall back to replication
+    assert spec_for("segments.dense.attn.wq.w", (2, 100, 50), m) == P(None, None, None)
+
+
+def test_param_specs_cover_all_big_leaves():
+    m = FakeMesh()
+    cfg = get_config("qwen3_8b")
+    params = jax.eval_shape(lambda k: L.init_params(k, cfg),
+                            jax.random.PRNGKey(0))
+    specs = param_specs(params, m)
+    flat_p = jax.tree_util.tree_flatten_with_path(params)[0]
+    flat_s = jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P))
+    n_sharded = sum(1 for s in flat_s if any(a is not None for a in s))
+    # every matmul weight should be sharded (only norms/biases replicated)
+    big = sum(1 for (path, leaf) in flat_p if leaf.size > 1_000_000)
+    assert n_sharded >= big
+
+
+def test_batch_spec_divisibility():
+    m = FakeMesh()
+    assert batch_spec((256, 4096), m) == P(("pod", "data"), None)
+    assert batch_spec((1, 4096), m) == P(None, None)
+
+
+def test_make_production_mesh_requires_512_devices():
+    if len(jax.devices()) < 512:
+        with pytest.raises(Exception):
+            make_production_mesh(multi_pod=True)
+
+
+DRYRUN_LITE = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json, jax
+from repro.launch import dryrun
+from repro.launch.mesh import make_host_mesh
+out = {}
+mesh = make_host_mesh(model=2, data=2, pod=2)
+for arch, shape in [("qwen2_0_5b", "train_4k"), ("rwkv6_1_6b", "decode_32k")]:
+    compiled, lowered, info = dryrun.build_cell(arch, shape, mesh=mesh)
+    info = dryrun.analyze_cell(compiled, info)
+    out[f"{arch}:{shape}"] = {k: info[k] for k in
+                              ("bottleneck", "hlo_flops_per_device",
+                               "collective_bytes_per_device")}
+print(json.dumps(out))
+"""
+
+
+@pytest.mark.slow
+def test_dryrun_lite_multipod_subprocess():
+    env = dict(os.environ,
+               PYTHONPATH=os.path.join(REPO, "src"),
+               XLA_FLAGS="--xla_force_host_platform_device_count=8")
+    r = subprocess.run([sys.executable, "-c", DRYRUN_LITE], env=env,
+                       capture_output=True, text=True, timeout=900)
+    assert r.returncode == 0, r.stderr[-3000:]
+    out = json.loads(r.stdout.strip().splitlines()[-1])
+    for cell, info in out.items():
+        assert info["hlo_flops_per_device"] > 0, cell
+        assert info["collective_bytes_per_device"] > 0, cell
