@@ -1,10 +1,13 @@
 """Paper Fig. 2: update-step time vs population size per implementation.
 
-Arms (this runtime has no CUDA/torch — Torch arms are reported as n/a with
+Arms are (backend x num_steps) cells of the unified ``repro.pop`` API — the
+same registry every consumer uses, so what we benchmark is literally what
+trains (this runtime has no CUDA/torch — Torch arms are reported as n/a with
 the paper's published qualitative result quoted in EXPERIMENTS.md):
-  jax_sequential_1   — one jit'd single-agent step, python loop over members
+  jax_sequential_1   — backend="sequential": one jit'd single-agent step,
+                       python loop over members
   jax_sequential_50  — same, 50 steps chained per call (paper's async trick)
-  jax_vectorized_1   — jit(vmap(step))            (the paper's protocol)
+  jax_vectorized_1   — backend="vectorized": jit(vmap(step)), the protocol
   jax_vectorized_50  — jit(vmap(50 chained steps))
 Reported: ms per *member-update-step* and speedup vs jax_sequential_1.
 """
@@ -12,7 +15,7 @@ import jax
 import jax.numpy as jnp
 
 from benchmarks.common import emit, td3_batch, timeit
-from repro.core import population_init, sequential_update, vectorized_update
+from repro.pop import ModuleAgent, make_update
 from repro.rl import td3, sac
 
 OBS, ACT = 17, 6
@@ -23,25 +26,22 @@ def run(pop_sizes=(1, 2, 4, 8, 16), num_steps_chained=10, agents=("td3", "sac"),
     key = jax.random.PRNGKey(0)
     emit(["bench", "agent", "impl", "pop", "ms_per_member_step", "speedup_vs_seq1"])
     for agent_name in agents:
-        mod = {"td3": td3, "sac": sac}[agent_name]
+        agent = ModuleAgent({"td3": td3, "sac": sac}[agent_name], OBS, ACT)
         base_ms = None
         for n in pop_sizes:
-            pop = population_init(lambda k: mod.init(k, OBS, ACT), key, n)
+            pop = agent.population_init(key, n)
             b1 = td3_batch(key, n)
             bk = jax.tree.map(
                 lambda x: jnp.broadcast_to(x, (num_steps_chained,) + x.shape),
                 b1)
-            arms = {
-                "jax_sequential_1": (sequential_update(mod.update, 1), b1, 1),
-                f"jax_sequential_{num_steps_chained}":
-                    (sequential_update(mod.update, num_steps_chained), bk,
-                     num_steps_chained),
-                "jax_vectorized_1":
-                    (vectorized_update(mod.update, 1, donate=False), b1, 1),
-                f"jax_vectorized_{num_steps_chained}":
-                    (vectorized_update(mod.update, num_steps_chained,
-                                       donate=False), bk, num_steps_chained),
-            }
+            arms = {}
+            for backend in ("sequential", "vectorized"):
+                arms[f"jax_{backend}_1"] = (
+                    make_update(agent, backend, num_steps=1, donate=False),
+                    b1, 1)
+                arms[f"jax_{backend}_{num_steps_chained}"] = (
+                    make_update(agent, backend, num_steps=num_steps_chained,
+                                donate=False), bk, num_steps_chained)
             for name, (fn, batch, steps) in arms.items():
                 t = timeit(lambda: fn(pop, batch, None), iters=iters)
                 ms = 1e3 * t / (n * steps)

@@ -1,84 +1,86 @@
-"""CEM-RL case study (paper §5.2), vectorized per §4.2.
+"""CEM-RL case study (paper §5.2), vectorized per §4.2, via the unified API.
 
-CEM maintains a gaussian over policy parameters; each iteration samples N
-policies, trains half of them with TD3 against ONE shared critic (the
-population-averaged critic loss — the paper's second-order modification),
-evaluates everyone, and refits the distribution on the elite half.
+CEM maintains a gaussian over policy parameters.  Each iteration the
+population (drawn from that distribution) trains HALF its members with TD3
+against ONE shared critic (``train_frac=0.5``, CEM-RL Algorithm 1) — the
+paper's second-order modification averages the critic loss over the trainees
+so the whole update is a single compiled call — then everyone is evaluated
+and ``CEM.evolve`` refits the distribution on the elite half and redraws the
+members.  Swapping ``backend="vectorized"`` for ``"sequential"`` runs the
+ORIGINAL CEM-RL interleaved ordering (the paper's baseline arm); swapping
+``strategy="cem"`` for ``"pbt"`` turns the same loop into PBT over the
+shared-critic population.
 
     PYTHONPATH=src python examples/cemrl.py [--population 10] [--iters 20]
 """
 import argparse
-import os
-import sys
 import time
-
-sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-from repro.core import cem_init, cem_sample, cem_update
-from repro.core.shared import SharedCriticState, init as shared_init, \
-    make_shared_critic_update
+from repro.configs.base import PopulationConfig
 from repro.data import buffer_add, buffer_init, buffer_sample
 from repro.envs import make, rollout
-from repro.rl import networks as nets
+from repro.pop import PopTrainer, SharedCriticAgent
 from repro.rl import td3
 
 
-def run(population=10, iters=20, rl_steps=64, collect_steps=200, seed=0):
+def run(population=10, iters=20, rl_steps=64, collect_steps=200,
+        strategy="cem", backend="vectorized", seed=0):
     env = make("pendulum")
     obs_dim, act_dim = env.spec.obs_dim, env.spec.act_dim
     key = jax.random.PRNGKey(seed)
-    n, half = population, population // 2
+    n = population
 
-    st = shared_init(key, obs_dim, act_dim, half)
-    cem_state, unravel = cem_init(
-        jax.tree.map(lambda x: x[0], st.policies), sigma_init=1e-2)
-    update = jax.jit(make_shared_critic_update())
+    # pbt_interval=0: the CEM refit is driven explicitly below, AFTER the
+    # post-training evaluation (Algorithm 1 ordering: sample -> train half
+    # -> evaluate all -> refit on what was evaluated)
+    pcfg = PopulationConfig(size=n, strategy=strategy, backend=backend,
+                            pbt_interval=0, elite_frac=0.5, sigma_init=1e-2,
+                            fitness_window=1)
+    trainer = PopTrainer(SharedCriticAgent(obs_dim, act_dim, train_frac=0.5),
+                         pcfg, seed=seed)
+
     buf = buffer_init(50_000, {
         "obs": jnp.zeros((obs_dim,)), "action": jnp.zeros((act_dim,)),
         "reward": jnp.zeros(()), "next_obs": jnp.zeros((obs_dim,)),
         "done": jnp.zeros(())})
-
     evaluate = jax.jit(lambda actors, keys: jax.vmap(
         lambda a, k: rollout(env, lambda p, o, kk: td3.policy(
             p, o, None), a, k, collect_steps))(actors, keys))
-    unravel_n = jax.jit(jax.vmap(unravel))
 
+    mean_return = float("nan")
     t0 = time.time()
     for it in range(iters):
-        key, k1, k2, k3 = jax.random.split(key, 4)
-        flat = cem_sample(k1, cem_state, n)              # (N, P)
-        policies = unravel_n(flat)
+        key, k2 = jax.random.split(key)
 
-        # half the population undergoes TD3 updates w/ the shared critic
-        trainees = jax.tree.map(lambda x: x[:half], policies)
-        st = st._replace(policies=trainees,
-                         target_policies=jax.tree.map(jnp.copy, trainees))
-        for j in range(rl_steps):
-            key, ks = jax.random.split(key)
-            if int(buf.total) >= 256:
-                batch = jax.vmap(lambda kk: buffer_sample(buf, kk, 128))(
-                    jax.random.split(ks, half))
-                st, _ = update(st, batch, None)
-        policies = jax.tree.map(
-            lambda tr, al: jnp.concatenate([tr, al[half:]]), st.policies,
-            policies)
+        # 1. train: TD3 updates of the first half against the shared critic
+        for _ in range(rl_steps):
+            key, kb = jax.random.split(key)
+            if int(buf.total) < 256:
+                break
+            batch = jax.vmap(lambda kk: buffer_sample(buf, kk, 128))(
+                jax.random.split(kb, n))
+            trainer.step(batch)
 
-        traj = evaluate(policies, jax.random.split(k2, n))
+        # 2. evaluate everyone AFTER training (these returns belong to the
+        #    parameters the refit will flatten)
+        traj = evaluate(trainer.actors, jax.random.split(k2, n))
         buf = buffer_add(buf, jax.tree.map(
             lambda x: x.reshape((-1,) + x.shape[2:]), traj))
         returns = traj["reward"].sum(-1)
-        flat_trained = jax.vmap(
-            lambda p: jax.flatten_util.ravel_pytree(p)[0])(policies)
-        cem_state = cem_update(cem_state, flat_trained, returns)
+
+        # 3. refit the distribution on the elites and redraw the members
+        trainer.report_fitness(returns)
+        trainer.evolve()
 
         mean_return = float(jnp.mean(returns))
+        sigma = float(jnp.mean(trainer.strategy.cem_state.var)) \
+            if strategy == "cem" else float("nan")
         print(f"iter {it + 1}: mean return {mean_return:+.2f} "
               f"best {float(returns.max()):+.2f} "
-              f"sigma {float(jnp.mean(cem_state.var)):.2e} "
+              f"sigma {sigma:.2e} "
               f"({time.time() - t0:.1f}s)", flush=True)
     return mean_return
 
@@ -87,5 +89,9 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--population", type=int, default=10)
     ap.add_argument("--iters", type=int, default=20)
+    ap.add_argument("--strategy", default="cem", choices=["cem", "pbt", "none"])
+    ap.add_argument("--backend", default="vectorized",
+                    choices=["vectorized", "sequential"])
     args = ap.parse_args()
-    run(population=args.population, iters=args.iters)
+    run(population=args.population, iters=args.iters,
+        strategy=args.strategy, backend=args.backend)

@@ -1,40 +1,41 @@
-"""DvD case study (paper §5.3): population TD3 + determinant diversity term.
+"""DvD case study (paper §5.3) via the unified API: population TD3 + the
+determinant diversity term.
 
-Same shared-critic machinery as CEM-RL; the actor loss gets the joint
--logdet(RBF kernel) diversity term over behavioral embeddings with the
-paper's §B.2 schedule for the coefficient.
+``strategy="dvd"`` installs the §B.2 diversity-coefficient schedule on the
+shared-critic agent — selection pressure comes from the joint -logdet(RBF
+kernel) term inside the actor loss, so the evolve step is the identity.
+Swapping to ``strategy="pbt"`` (one line) trades the diversity loss for
+exploit/explore selection over the same population.
 
     PYTHONPATH=src python examples/dvd.py [--population 5] [--iters 20]
 """
 import argparse
-import os
-import sys
 import time
-
-sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-from repro.core.dvd import dvd_coef_schedule, behavior_embedding, dvd_loss
-from repro.core.shared import init as shared_init, make_shared_critic_update
+from repro.configs.base import PopulationConfig
+from repro.core.dvd import behavior_embedding, dvd_loss
 from repro.data import buffer_add, buffer_init, buffer_sample
 from repro.envs import make, rollout
+from repro.pop import PopTrainer, SharedCriticAgent
 from repro.rl import networks as nets
 from repro.rl import td3
 
 
 def run(population=5, iters=20, collect_steps=200, updates_per_iter=32,
-        seed=0):
+        strategy="dvd", seed=0):
     env = make("reacher")  # multi-goal env where diversity matters
     obs_dim, act_dim = env.spec.obs_dim, env.spec.act_dim
     key = jax.random.PRNGKey(seed)
     n = population
 
-    st = shared_init(key, obs_dim, act_dim, n)
-    update = jax.jit(make_shared_critic_update(
-        dvd_coef_fn=lambda s: dvd_coef_schedule(s, period=400)))
+    pcfg = PopulationConfig(size=n, strategy=strategy, dvd_period=400,
+                            pbt_interval=updates_per_iter, exploit_frac=0.2,
+                            fitness_window=updates_per_iter)
+    trainer = PopTrainer(SharedCriticAgent(obs_dim, act_dim), pcfg, seed=seed)
+
     buf = buffer_init(50_000, {
         "obs": jnp.zeros((obs_dim,)), "action": jnp.zeros((act_dim,)),
         "reward": jnp.zeros(()), "next_obs": jnp.zeros((obs_dim,)),
@@ -43,10 +44,11 @@ def run(population=5, iters=20, collect_steps=200, updates_per_iter=32,
         lambda a, k: rollout(env, td3.policy, a, k, collect_steps)
     )(actors, keys))
 
+    returns = None
     t0 = time.time()
     for it in range(iters):
         key, k1, k2 = jax.random.split(key, 3)
-        traj = collect(st.policies, jax.random.split(k1, n))
+        traj = collect(trainer.actors, jax.random.split(k1, n))
         buf = buffer_add(buf, jax.tree.map(
             lambda x: x.reshape((-1,) + x.shape[2:]), traj))
         returns = traj["reward"].sum(-1)
@@ -54,9 +56,9 @@ def run(population=5, iters=20, collect_steps=200, updates_per_iter=32,
             key, ks = jax.random.split(key)
             batch = jax.vmap(lambda kk: buffer_sample(buf, kk, 128))(
                 jax.random.split(ks, n))
-            st, m = update(st, batch, None)
+            trainer.step(batch, fitness=returns)
         probe = buffer_sample(buf, k2, 20)["obs"]
-        emb = behavior_embedding(nets.actor_apply, st.policies, probe)
+        emb = behavior_embedding(nets.actor_apply, trainer.actors, probe)
         print(f"iter {it + 1}: best return {float(returns.max()):+.2f} "
               f"diversity {-float(dvd_loss(emb)):.3f} "
               f"({time.time() - t0:.1f}s)", flush=True)
@@ -67,5 +69,6 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--population", type=int, default=5)
     ap.add_argument("--iters", type=int, default=20)
+    ap.add_argument("--strategy", default="dvd", choices=["dvd", "pbt", "none"])
     args = ap.parse_args()
-    run(population=args.population, iters=args.iters)
+    run(population=args.population, iters=args.iters, strategy=args.strategy)

@@ -1,30 +1,25 @@
 """End-to-end PBT case study (paper §5.1), scaled to this machine.
 
 Trains a population of TD3 agents on the pure-JAX pendulum environment with
-the full production loop: vectorized data collection -> per-member replay
-buffers -> chained vectorized update steps -> on-device PBT exploit/explore
--> checkpointing.  A single-seed baseline (population of 1, default hypers)
-runs alongside for the paper's performance-vs-walltime comparison.
+the full production loop through ``PopTrainer``: vectorized data collection
+-> per-member replay buffers -> chained vectorized update steps
+(``num_steps`` in the config) -> on-device PBT exploit/explore ->
+checkpointing.  The same script trains a single-seed baseline by passing
+``--population 1`` — no separate code path.
 
     PYTHONPATH=src python examples/pbt_td3.py [--population 8] [--iters 30]
 """
 import argparse
-import os
-import sys
 import time
-
-sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.checkpoint import CheckpointManager
 from repro.configs.base import HyperSpace, PopulationConfig
-from repro.core import (pbt_step, population_init, sample_hypers,
-                        vectorized_update)
 from repro.data import buffer_add, buffer_init, buffer_sample
 from repro.envs import make, rollout
+from repro.pop import ModuleAgent, PopTrainer
 from repro.rl import td3
 
 SPACE = HyperSpace(
@@ -34,15 +29,18 @@ SPACE = HyperSpace(
 
 
 def run(population=8, iters=30, steps_per_iter=128, batch_size=128,
-        pbt_every=10, ckpt_dir="/tmp/pbt_td3_ckpt", seed=0):
+        pbt_every=10, backend="vectorized", ckpt_dir="/tmp/pbt_td3_ckpt",
+        seed=0):
     env = make("pendulum")
     key = jax.random.PRNGKey(seed)
     n = population
-    pcfg = PopulationConfig(size=n, exploit_frac=0.3, hyper_space=SPACE)
+    pcfg = PopulationConfig(
+        size=n, strategy="pbt", backend=backend,
+        num_steps=steps_per_iter // 2, pbt_interval=pbt_every,
+        exploit_frac=0.3, hyper_space=SPACE, fitness_window=5, donate=False)
+    trainer = PopTrainer(ModuleAgent(td3, env.spec.obs_dim, env.spec.act_dim),
+                         pcfg, seed=seed, checkpoint_dir=ckpt_dir)
 
-    pop = population_init(lambda k: td3.init(k, env.spec.obs_dim,
-                                             env.spec.act_dim), key, n)
-    hypers = sample_hypers(key, SPACE, n) if n > 1 else None
     bufs = jax.vmap(lambda _: buffer_init(20_000, {
         "obs": jnp.zeros((env.spec.obs_dim,)),
         "action": jnp.zeros((env.spec.act_dim,)),
@@ -52,40 +50,34 @@ def run(population=8, iters=30, steps_per_iter=128, batch_size=128,
     collect = jax.jit(lambda actors, keys: jax.vmap(
         lambda a, k: rollout(env, td3.policy, a, k, steps_per_iter)
     )(actors, keys))
-    update = vectorized_update(td3.update, num_steps=steps_per_iter // 2,
-                               donate=False)
     sample = jax.jit(jax.vmap(lambda b, k: jax.vmap(
         lambda kk: buffer_sample(b, kk, batch_size)
     )(jax.random.split(k, steps_per_iter // 2))))
 
-    mgr = CheckpointManager(ckpt_dir, keep=2)
-    fitness_hist = []
+    returns = None
     t0 = time.time()
     for it in range(iters):
         key, kc, ks = jax.random.split(key, 3)
-        traj = collect(pop.actor, jax.random.split(kc, n))
+        traj = collect(trainer.actors, jax.random.split(kc, n))
         bufs = jax.vmap(buffer_add)(bufs, traj)
         returns = traj["reward"].sum(-1) * (200 / steps_per_iter)
-        fitness_hist.append(np.asarray(returns))
 
         batches = sample(bufs, jax.random.split(ks, n))
         # batches: (n, k, B, ...) -> (k, n, B, ...) for the chained protocol
         batches = jax.tree.map(lambda x: jnp.swapaxes(x, 0, 1), batches)
-        pop, metrics = update(pop, batches, hypers)
+        _, lineage = trainer.step(batches, fitness=returns)
 
-        if n > 1 and (it + 1) % pbt_every == 0:
-            fit = jnp.asarray(np.mean(fitness_hist[-5:], axis=0))
-            key, kp = jax.random.split(key)
-            pop, hypers, parents = pbt_step(kp, pop, hypers, fit, pcfg)
+        if lineage is not None:
+            fit = trainer.last_fitness
             print(f"[pbt] iter {it + 1} fitness best={float(fit.max()):+.1f} "
-                  f"parents={np.asarray(parents)}")
+                  f"parents={np.asarray(lineage)}")
         if (it + 1) % 10 == 0:
-            mgr.save_async(it, pop)
+            trainer.save()
             print(f"iter {it + 1}: best return {float(returns.max()):+.2f} "
                   f"mean {float(returns.mean()):+.2f} "
                   f"({time.time() - t0:.1f}s)", flush=True)
-    mgr.wait()
-    best = float(np.max(fitness_hist[-1]))
+    trainer.wait()
+    best = float(np.max(np.asarray(returns)))
     print(f"done: best final return {best:+.2f} in {time.time() - t0:.1f}s")
     return best
 
@@ -94,5 +86,7 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--population", type=int, default=8)
     ap.add_argument("--iters", type=int, default=30)
+    ap.add_argument("--backend", default="vectorized",
+                    choices=["vectorized", "sequential", "sharded"])
     args = ap.parse_args()
-    run(population=args.population, iters=args.iters)
+    run(population=args.population, iters=args.iters, backend=args.backend)

@@ -3,15 +3,11 @@ reduced-config LMs, one vectorized update stream, with checkpointing.
 
 This is the bridge between the paper's RL setting (§5.1) and the
 framework's LM scale-out (EXPERIMENTS.md §Population): the exact same
-`core` machinery drives both.
+``repro.pop`` machinery drives both — this script is nothing but a config
+for the unified train driver.
 
     PYTHONPATH=src python examples/population_lm.py
 """
-import os
-import sys
-
-sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
-
 from repro.launch import train
 
 if __name__ == "__main__":

@@ -1,0 +1,64 @@
+"""Version shims for the jax APIs this repo uses that moved across releases.
+
+Two surfaces differ between the jax the image ships (0.4.x) and current
+releases (>= 0.5):
+
+  * ``jax.sharding.get_abstract_mesh`` — the public accessor for the
+    ambient abstract mesh does not exist on 0.4.x (the private
+    ``jax._src.mesh.get_abstract_mesh`` returns a different type there).
+    On old jax we report "no mesh context": sharding constraints become
+    no-ops, which is the correct degenerate behaviour on a single device.
+  * ``jax.sharding.AxisType`` / the ``axis_types=`` kwarg of
+    ``jax.make_mesh`` — absent on 0.4.x, where all axes are Auto anyway.
+
+Everything in the repo goes through these two helpers instead of touching
+``jax.sharding`` directly for mesh construction / mesh-context queries.
+"""
+from __future__ import annotations
+
+import inspect
+
+import jax
+
+
+def get_abstract_mesh():
+    """The ambient abstract mesh, or None when unset / unsupported."""
+    fn = getattr(jax.sharding, "get_abstract_mesh", None)
+    if fn is None:
+        return None
+    return fn()
+
+
+def set_mesh(mesh):
+    """Context manager making ``mesh`` ambient: ``jax.sharding.set_mesh`` on
+    new jax; on 0.4.x the Mesh object itself is the context manager."""
+    fn = getattr(jax.sharding, "set_mesh", None)
+    if fn is not None:
+        return fn(mesh)
+    return mesh
+
+
+def shard_map(f, *, mesh, in_specs, out_specs):
+    """``jax.shard_map`` where it exists, else the 0.4.x experimental one.
+    The replication-check kwarg was renamed (check_rep -> check_vma) partway
+    through, so pick whichever the installed signature accepts."""
+    fn = getattr(jax, "shard_map", None)
+    if fn is None:
+        from jax.experimental.shard_map import shard_map as fn
+    params = inspect.signature(fn).parameters
+    kw = {}
+    if "check_vma" in params:
+        kw["check_vma"] = False
+    elif "check_rep" in params:
+        kw["check_rep"] = False
+    return fn(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kw)
+
+
+def make_mesh(axis_shapes, axis_names, *, explicit: bool = False):
+    """``jax.make_mesh`` with Auto (or Explicit) axis types where supported."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return jax.make_mesh(axis_shapes, axis_names)
+    kind = axis_type.Explicit if explicit else axis_type.Auto
+    return jax.make_mesh(axis_shapes, axis_names,
+                         axis_types=(kind,) * len(axis_names))

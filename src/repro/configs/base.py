@@ -140,14 +140,31 @@ class HyperSpace:
 
 @dataclass(frozen=True)
 class PopulationConfig:
-    """The paper's technique as a first-class config feature."""
+    """The paper's technique as a first-class config feature.
+
+    ``strategy`` and ``backend`` are the two one-line knobs of the unified
+    ``repro.pop`` API: strategy in {none, pbt, cem, dvd} picks the outer
+    evolution loop (size 1 always degrades to none), backend in
+    {vectorized, sequential, sharded} picks how the update executes.
+    """
     size: int = 1
-    pbt_interval: int = 100_000          # update steps between exploit/explore
+    strategy: str = "pbt"                # repro.pop.STRATEGIES key
+    backend: str = "vectorized"          # repro.pop.BACKENDS key
+    num_steps: int = 1                   # chained update steps per call (§4.1)
+    donate: bool = True                  # donate population buffers under jit
+    pbt_interval: int = 100_000          # trainer steps between evolve calls
     exploit_frac: float = 0.3            # paper §B.1: bottom/top 30%
     perturb_prob: float = 0.5            # resample vs perturb
     perturb_scale: float = 1.2
     hyper_space: HyperSpace = field(default_factory=HyperSpace)
     fitness_window: int = 10             # last-k episode returns / -loss window
+    # CEM strategy (paper §5.2 / B.2)
+    elite_frac: float = 0.5
+    sigma_init: float = 1e-2
+    cem_noise_init: float = 1e-2
+    cem_noise_decay: float = 0.999
+    # DvD strategy (§B.2 coefficient schedule)
+    dvd_period: int = 20_000
 
 
 @dataclass(frozen=True)

@@ -1,5 +1,8 @@
 # The paper's primary contribution: vectorization + compilation protocols
 # for population-based training (FastPBRL, ICML 2022).
+# These are the low-level building blocks; the unified training API that
+# composes them (Agent / EvolutionStrategy / UpdateBackend / PopTrainer)
+# lives in repro.pop.
 from repro.core.population import (  # noqa: F401
     population_init, stack_members, unstack_members, member, population_size,
 )

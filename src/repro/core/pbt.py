@@ -20,11 +20,15 @@ from repro.configs.base import PopulationConfig
 from repro.core.hyperparams import perturb_hypers
 
 
-def pbt_step(key, pop_state, hypers, fitness, pcfg: PopulationConfig):
+def pbt_step(key, pop_state, hypers, fitness, pcfg: PopulationConfig,
+             gather=None):
     """fitness: (N,) — higher is better. Returns (pop_state, hypers, parents).
 
     ``parents[i]`` is the member whose state member i now holds (== i for
-    survivors); exposed for logging/lineage tracking.
+    survivors); exposed for logging/lineage tracking.  ``gather(pop_state,
+    parents)`` overrides the member copy for states that are not plain
+    stacked pytrees (e.g. the shared-critic family, where only the
+    per-member components move).
     """
     n = fitness.shape[0]
     k = max(1, int(round(n * pcfg.exploit_frac)))
@@ -35,7 +39,10 @@ def pbt_step(key, pop_state, hypers, fitness, pcfg: PopulationConfig):
     parent_choice = top[jax.random.randint(kp, (k,), 0, k)]
     parents = jnp.arange(n).at[bottom].set(parent_choice)
 
-    new_state = jax.tree.map(lambda x: x[parents], pop_state)
+    if gather is None:
+        new_state = jax.tree.map(lambda x: x[parents], pop_state)
+    else:
+        new_state = gather(pop_state, parents)
     replaced = jnp.zeros((n,), bool).at[bottom].set(True)
     new_hypers = jax.tree.map(lambda x: x[parents], hypers)
     new_hypers = perturb_hypers(kh, new_hypers, pcfg.hyper_space, replaced,

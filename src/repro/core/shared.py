@@ -66,11 +66,17 @@ def _member_critic_loss(critic, target_policy, target_critic, batch, key, h):
     return jnp.mean((q1 - target) ** 2) + jnp.mean((q2 - target) ** 2)
 
 
-def make_shared_critic_update(*, dvd_coef_fn=None, probe_size: int = 20):
+def make_shared_critic_update(*, dvd_coef_fn=None, probe_size: int = 20,
+                              train_frac: float = 1.0):
     """Returns jit-able ``update(state, batches, hypers) -> (state, metrics)``.
 
     batches: pytree with leading (N, B, ...) — one batch per member (§4.2:
     "each batch of training data goes through all of the policy networks").
+
+    ``train_frac < 1`` trains only the first ``round(N * train_frac)``
+    members (CEM-RL trains half the sampled policies, Algorithm 1): the
+    critic loss averages over the trainees and the remaining members'
+    policies/optimizers are left untouched.
     """
 
     def update(state: SharedCriticState, batches, hypers=None):
@@ -78,15 +84,18 @@ def make_shared_critic_update(*, dvd_coef_fn=None, probe_size: int = 20):
         if hypers:
             h.update(hypers)
         key, kc = jax.random.split(state.key)
+        n = jax.tree.leaves(batches)[0].shape[0]
+        k_train = max(1, round(n * train_frac))
+        trained = jnp.arange(n) < k_train   # (N,) static-shape gate
 
-        # --- critic step: loss averaged over the population (§4.2) ---------
+        # --- critic step: loss averaged over the trainees (§4.2) -----------
         def critic_loss(critic):
-            keys = jax.random.split(kc, jax.tree.leaves(batches)[0].shape[0])
+            keys = jax.random.split(kc, n)
             losses = jax.vmap(
                 lambda tp, b, k: _member_critic_loss(
                     critic, tp, state.target_critic, b, k, h)
             )(state.target_policies, batches, keys)
-            return jnp.mean(losses)
+            return jnp.sum(jnp.where(trained, losses, 0.0)) / k_train
 
         closs, cgrads = jax.value_and_grad(critic_loss)(state.critic)
         cupd, critic_opt = _opt_update(cgrads, state.critic_opt,
@@ -108,16 +117,23 @@ def make_shared_critic_update(*, dvd_coef_fn=None, probe_size: int = 20):
             return loss
 
         aloss, agrads = jax.value_and_grad(pop_actor_loss)(state.policies)
-        aupd, policy_opt = jax.vmap(
+        aupd, policy_opt_new = jax.vmap(
             lambda g, o: _opt_update(g, o, lr_override=h["actor_lr"])
         )(agrads, state.policy_opt)
-        policies = apply_updates(state.policies, aupd)
+        policies_new = apply_updates(state.policies, aupd)
+        # non-trainees keep their params/optimizer bit-identical
+        gate = lambda new, old: jax.tree.map(
+            lambda a, b: jnp.where(
+                trained.reshape((n,) + (1,) * (a.ndim - 1)), a, b), new, old)
+        policies = gate(policies_new, state.policies)
+        policy_opt = gate(policy_opt_new, state.policy_opt)
 
         soft = lambda t, o: jax.tree.map(
             lambda a, b: (1 - TAU) * a + TAU * b, t, o)
         new_state = SharedCriticState(
             policies=policies, critic=critic,
-            target_policies=soft(state.target_policies, policies),
+            target_policies=gate(soft(state.target_policies, policies),
+                                 state.target_policies),
             target_critic=soft(state.target_critic, critic),
             policy_opt=policy_opt, critic_opt=critic_opt,
             step=state.step + 1, key=key)

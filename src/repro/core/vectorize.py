@@ -25,13 +25,20 @@ from repro.core.population import member, population_size, stack_members
 
 
 def chain_steps(update_fn, num_steps: int):
-    """update over a (num_steps, ...) batch stack via lax.scan."""
+    """update over a (num_steps, ...) batch stack via lax.scan.
+
+    Float metrics are MEANED over the chained window (a k-sample fitness
+    estimate for PBT, not the last step's 1-sample one); integer metrics
+    (step counters) keep the final value.
+    """
     def chained(state, batches, hypers=None):
         def body(s, b):
             s, m = update_fn(s, b, hypers)
             return s, m
         state, metrics = jax.lax.scan(body, state, batches)
-        return state, jax.tree.map(lambda x: x[-1], metrics)
+        return state, jax.tree.map(
+            lambda x: jnp.mean(x, axis=0)
+            if jnp.issubdtype(x.dtype, jnp.floating) else x[-1], metrics)
     return chained
 
 

@@ -17,6 +17,7 @@ from __future__ import annotations
 
 import jax
 import numpy as np
+from repro import compat
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.models.sharding import param_specs
@@ -33,8 +34,7 @@ def plan_mesh(num_devices: int, *, preferred_model: int = 16,
     shape = (data, model)
     if multi_pod and data % 2 == 0:
         shape, axes = (2, data // 2, model), ("pod", "data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return compat.make_mesh(shape, axes)
 
 
 def relayout(tree, mesh):

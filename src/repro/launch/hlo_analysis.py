@@ -143,7 +143,8 @@ def _analyze_comp(comp: Comp, symtab_cache):
                 comp.traffic += _operand_bytes(rhs, sym) + _nbytes(out_type)
         mcomp = re.search(r"compare\(([^)]*)\)", rhs)
         if mcomp:
-            ops = [o.strip().lstrip("%") for o in mcomp.group(1).split(",")]
+            ops = re.findall(r"%([\w\.\-]+)", mcomp.group(1)) or \
+                [o.strip() for o in mcomp.group(1).split(",") if o.strip()]
             comp.compares.extend(ops)
     symtab_cache[comp.name] = sym
 
@@ -152,7 +153,12 @@ def _operand_names(rhs):
     m = re.search(r"\(([^)]*)\)", rhs)
     if not m:
         return []
-    return [o.strip().lstrip("%").split(" ")[-1]
+    # operands may print bare ("%name") or typed ("f32[64,128]{1,0} %name");
+    # shape commas break naive splitting, so prefer the %-sigil names
+    names = re.findall(r"%([\w\.\-]+)", m.group(1))
+    if names:
+        return names
+    return [o.strip().split(" ")[-1]
             for o in m.group(1).split(",") if o.strip()]
 
 

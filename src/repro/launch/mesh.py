@@ -6,13 +6,13 @@ touches jax device state.
 from __future__ import annotations
 
 import jax
+from repro import compat
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return compat.make_mesh(shape, axes)
 
 
 def make_host_mesh(model: int = 2, data: int | None = None, *,
@@ -21,8 +21,6 @@ def make_host_mesh(model: int = 2, data: int | None = None, *,
     n = len(jax.devices())
     if pod:
         data = data or n // (model * pod)
-        return jax.make_mesh((pod, data, model), ("pod", "data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 3)
+        return compat.make_mesh((pod, data, model), ("pod", "data", "model"))
     data = data or max(1, n // model)
-    return jax.make_mesh((data, model), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return compat.make_mesh((data, model), ("data", "model"))

@@ -2,16 +2,17 @@
 
 Production features exercised here (scaled down to whatever devices exist):
   * config-driven arch selection (--arch) + population size (--population)
+  * the unified ``repro.pop`` API: ONE ``PopTrainer`` code path for every
+    population size — size 1 is the degenerate (NoEvolution) case, so there
+    is no single-agent/population branching anywhere in this file
   * the paper's protocol: one jit'd vmapped train step updates every member,
     per-member learning-rate scale as a dynamic hyperparameter
+  * pluggable evolution (--strategy pbt|cem|none) and update backend
+    (--backend vectorized|sequential|sharded) as one-line config changes
   * on-device PBT exploit/explore every --pbt-interval steps (fitness =
-    -loss window mean)
+    -loss window mean, window capped at the config's fitness_window)
   * checkpoint/restart: atomic async checkpoints every --ckpt-every steps,
     ``--resume auto`` restarts from the latest one (fault tolerance)
-  * elastic re-layout: the mesh is rebuilt from the *surviving* device count
-    at startup; because population state is just a stacked pytree, a member
-    count that no longer divides the mesh is handled by PBT cloning
-    (population-based training is naturally elastic)
   * synthetic sharded token pipeline with restart-stable streams.
 """
 from __future__ import annotations
@@ -23,13 +24,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.checkpoint import CheckpointManager
 from repro.configs import TrainConfig, get_config
 from repro.configs.base import HyperSpace, PopulationConfig
-from repro.core import pbt_step, sample_hypers
 from repro.data import host_batches
-from repro.launch.mesh import make_host_mesh
-from repro.models import lm as lm_mod
+from repro.pop import LMAgent, PopTrainer
 
 
 def main(argv=None):
@@ -39,6 +37,10 @@ def main(argv=None):
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--seq-len", type=int, default=128)
     ap.add_argument("--population", type=int, default=1)
+    ap.add_argument("--strategy", default="pbt",
+                    choices=["pbt", "cem", "none"])
+    ap.add_argument("--backend", default="vectorized",
+                    choices=["vectorized", "sequential", "sharded"])
     ap.add_argument("--pbt-interval", type=int, default=50)
     ap.add_argument("--smoke", action="store_true",
                     help="use the reduced same-family config (CPU-sized)")
@@ -55,45 +57,27 @@ def main(argv=None):
     tcfg = TrainConfig(lr=args.lr, total_steps=args.steps,
                        warmup_steps=max(args.steps // 20, 1), seed=args.seed)
     n = args.population
-    print(f"[train] arch={cfg.name} pop={n} devices={len(jax.devices())}")
+    print(f"[train] arch={cfg.name} pop={n} strategy={args.strategy} "
+          f"backend={args.backend} devices={len(jax.devices())}")
 
-    key = jax.random.PRNGKey(args.seed)
-    opt_init, train_step = lm_mod.make_train_step(cfg, tcfg)
+    pcfg = PopulationConfig(
+        size=n, strategy=args.strategy, backend=args.backend,
+        pbt_interval=args.pbt_interval,
+        hyper_space=HyperSpace(log_uniform=(("lr_scale", 0.1, 10.0),)))
+    trainer = PopTrainer(LMAgent(cfg, tcfg), pcfg, seed=args.seed,
+                         checkpoint_dir=args.ckpt_dir)
 
-    if n == 1:
-        params = lm_mod.init_params(key, cfg)
-        opt = opt_init(params)
-        hypers = None
-    else:
-        params = jax.vmap(lambda k: lm_mod.init_params(k, cfg))(
-            jax.random.split(key, n))
-        opt = jax.vmap(opt_init)(params)
-        space = HyperSpace(log_uniform=(("lr_scale", 0.1, 10.0),))
-        hypers = sample_hypers(key, space, n)
-        pcfg = PopulationConfig(size=n, pbt_interval=args.pbt_interval,
-                                hyper_space=space)
-
-    mgr = CheckpointManager(args.ckpt_dir, keep=2)
     start_step = 0
-    if args.resume == "auto" and mgr.latest() is not None:
-        (params, opt), extra = mgr.restore((params, opt))
-        start_step = extra["step"] + 1
-        print(f"[train] resumed from step {extra['step']}")
+    if args.resume == "auto":
+        resumed = trainer.resume()
+        if resumed is not None:
+            start_step = resumed + 1
+            print(f"[train] resumed from step {resumed}")
 
-    if n == 1:
-        step_fn = jax.jit(train_step, donate_argnums=(0, 1))
-    else:
-        def pop_step(p, o, b, s, hyp):
-            return jax.vmap(
-                lambda pi, oi, bi, sc: train_step(pi, oi, bi, s, lr_scale=sc),
-                in_axes=(0, 0, 0, 0))(p, o, b, hyp["lr_scale"])
-        step_fn = jax.jit(pop_step, donate_argnums=(0, 1))
-
-    gen = host_batches(cfg.vocab_size, args.batch * max(n, 1), args.seq_len,
+    gen = host_batches(cfg.vocab_size, args.batch * n, args.seq_len,
                        seed=args.seed, start_step=start_step)
-    window = []
-    t0 = time.time()
-    for step in range(start_step, args.steps):
+
+    def next_batch():
         tokens = jnp.asarray(next(gen))
         if cfg.frontend == "audio_frames":
             batch = {"tokens": tokens,
@@ -106,36 +90,30 @@ def main(argv=None):
                           cfg.d_model), jnp.dtype(cfg.dtype))}
         else:
             batch = {"tokens": tokens}
-        if n > 1:
-            batch = jax.tree.map(
-                lambda x: x.reshape((n, args.batch) + x.shape[1:]), batch)
-            params, opt, metrics = step_fn(params, opt, batch,
-                                           jnp.asarray(step), hypers)
-            loss = float(jnp.mean(metrics["loss"]))
-            window.append(np.asarray(metrics["loss"]))
-        else:
-            params, opt, metrics = step_fn(params, opt, batch,
-                                           jnp.asarray(step))
-            loss = float(metrics["loss"])
+        return jax.tree.map(
+            lambda x: x.reshape((n, args.batch) + x.shape[1:]), batch)
 
-        if n > 1 and (step + 1) % args.pbt_interval == 0:
-            fitness = -jnp.mean(jnp.stack(window[-pcfg.fitness_window:]),
-                                axis=0)
-            key, kp = jax.random.split(key)
-            (params, opt), hypers, parents = pbt_step(
-                kp, (params, opt), hypers, fitness, pcfg)
+    last = {"loss": float("nan")}
+    t0 = time.time()
+
+    def on_step(step, metrics, lineage):
+        loss = last["loss"] = float(jnp.mean(metrics["loss"]))
+        if lineage is not None:
+            fitness = trainer.last_fitness
             print(f"[pbt] step {step + 1} fitness={np.asarray(fitness).round(3)}"
-                  f" parents={np.asarray(parents)}")
-
+                  f" parents={np.asarray(lineage)}")
         if (step + 1) % args.ckpt_every == 0 or step == args.steps - 1:
-            mgr.save_async(step, (params, opt), {"loss": loss})
+            trainer.save({"loss": loss})
         if step % 10 == 0 or step == args.steps - 1:
             print(f"[train] step {step} loss {loss:.4f} "
                   f"({(time.time() - t0) / max(step - start_step + 1, 1):.2f}"
                   f" s/step)", flush=True)
-    mgr.wait()
-    print(f"[train] done in {time.time() - t0:.1f}s, final loss {loss:.4f}")
-    return loss
+
+    trainer.run(args.steps, lambda step: next_batch(), on_step=on_step)
+    trainer.wait()
+    print(f"[train] done in {time.time() - t0:.1f}s, "
+          f"final loss {last['loss']:.4f}")
+    return last["loss"]
 
 
 if __name__ == "__main__":

@@ -15,6 +15,7 @@ from typing import Any
 
 import jax
 import jax.numpy as jnp
+from repro import compat
 
 from repro.models.sharding import constrain
 from repro.nn.basic import lecun_normal, rmsnorm_init, rmsnorm_apply
@@ -24,7 +25,7 @@ BIG_NEG = -2.0e38  # mask value in fp32 softmax
 
 
 def _heads_divide_model(num_heads: int) -> bool:
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = compat.get_abstract_mesh()
     if mesh is None or mesh.empty or "model" not in mesh.axis_names:
         return False
     return num_heads % mesh.shape["model"] == 0

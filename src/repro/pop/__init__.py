@@ -1,0 +1,14 @@
+# Unified population-training API (the paper's thesis as an interface):
+# single-agent training is population training with size=1, and every
+# evolution strategy / update backend is a config string, not a call site.
+from repro.pop.agent import (  # noqa: F401
+    Agent, ModuleAgent, LMAgent, SharedCriticAgent,
+)
+from repro.pop.strategy import (  # noqa: F401
+    EvolutionStrategy, NoEvolution, PBT, CEM, DvD,
+    STRATEGIES, make_strategy, register_strategy,
+)
+from repro.pop.backend import (  # noqa: F401
+    UpdateBackend, BACKENDS, make_update, register_backend,
+)
+from repro.pop.trainer import PopTrainer  # noqa: F401

@@ -1,0 +1,215 @@
+"""The ``Agent`` protocol: what a learner must expose to be population-trained.
+
+The paper's protocol (§4.1) only needs a functional single-agent triple
+``init / update / policy``; everything population-shaped (stacking, vmapping,
+hyperparameter injection, exploit/explore) is generic machinery layered on
+top.  This module pins that contract down and provides adapters for the
+three learner families in the repo:
+
+  * ``ModuleAgent``       — the functional RL modules (td3 / sac / dqn):
+                            per-member state, per-member update.
+  * ``LMAgent``           — the language-model train step: state is
+                            (params, opt_state, step), fitness is -loss.
+  * ``SharedCriticAgent`` — the §4.2 family (CEM-RL / DvD): ONE critic
+                            shared across the population, so the update is
+                            inherently population-level (``population_level
+                            = True``) and the backend picks between the
+                            paper's averaged-loss update and the original
+                            CEM-RL sequential ordering.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Protocol, runtime_checkable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.population import population_init
+
+
+@runtime_checkable
+class Agent(Protocol):
+    """Contract consumed by ``repro.pop`` backends and ``PopTrainer``.
+
+    ``population_level`` distinguishes the two update shapes:
+      False — ``update(state, batch, hypers)`` is a SINGLE-member step; the
+              backend vmaps / loops it over the stacked population.
+      True  — ``update`` already consumes the whole stacked population
+              (shared-critic family); the backend jits it directly.
+    """
+    population_level: bool
+
+    def population_init(self, key, n: int): ...
+    def update(self, state, batch, hypers=None): ...
+    def policy(self, actor_params, obs, key=None): ...
+    def actor_params(self, pop_state): ...
+    def fitness_from_metrics(self, metrics): ...
+
+
+class AgentBase:
+    """Default implementations shared by the adapters."""
+    population_level = False
+
+    def population_init(self, key, n: int):
+        return population_init(self.init, key, n)
+
+    def fitness_from_metrics(self, metrics):
+        """Per-member fitness derivable from update metrics, or None when
+        fitness comes from the environment (episode returns)."""
+        return None
+
+    def gather_members(self, pop_state, parents):
+        """PBT exploit: member i adopts member ``parents[i]``'s state."""
+        return jax.tree.map(lambda x: x[parents], pop_state)
+
+    # --- evolvable-parameter accessors (used by parameter-space strategies
+    # such as CEM; default: the actor params) -----------------------------
+    def evolvable_params(self, pop_state):
+        return self.actor_params(pop_state)
+
+    def with_evolvable_params(self, pop_state, new_params):
+        raise NotImplementedError
+
+
+class ModuleAgent(AgentBase):
+    """Adapter for the functional RL modules (``repro.rl.{td3,sac,dqn}``).
+
+    Any module exposing ``init(key, obs_dim, act_dim, **kw) -> state``,
+    ``update(state, batch, hypers) -> (state, metrics)`` and
+    ``policy(actor_params, obs, key)`` fits.
+    """
+
+    def __init__(self, module, obs_dim: int, act_dim: int, *,
+                 actor_field: str | None = None, **init_kwargs):
+        self.module = module
+        self.obs_dim, self.act_dim = obs_dim, act_dim
+        self.init_kwargs = init_kwargs
+        self._actor_field = actor_field
+
+    def init(self, key):
+        return self.module.init(key, self.obs_dim, self.act_dim,
+                                **self.init_kwargs)
+
+    def update(self, state, batch, hypers=None):
+        return self.module.update(state, batch, hypers)
+
+    def policy(self, actor_params, obs, key=None):
+        return self.module.policy(actor_params, obs, key)
+
+    def _field(self, state) -> str:
+        if self._actor_field is None:
+            self._actor_field = "actor" if hasattr(state, "actor") else "q"
+        return self._actor_field
+
+    def actor_params(self, pop_state):
+        return getattr(pop_state, self._field(pop_state))
+
+    def with_evolvable_params(self, pop_state, new_params):
+        field = self._field(pop_state)
+        repl = {field: new_params}
+        target = "target_" + field
+        if hasattr(pop_state, target):
+            repl[target] = jax.tree.map(jnp.copy, new_params)
+        return pop_state._replace(**repl)
+
+
+class LMState(NamedTuple):
+    params: Any
+    opt_state: Any
+    step: jnp.ndarray  # per-member step drives the LR schedule; checkpointed
+
+
+class LMAgent(AgentBase):
+    """Adapter for ``repro.models.lm.make_train_step``.
+
+    The per-member hyperparameter is ``lr_scale`` (the paper's LM study);
+    fitness is the negative windowed loss.
+    """
+
+    def __init__(self, cfg, tcfg):
+        from repro.models import lm as lm_mod
+        self.cfg, self.tcfg = cfg, tcfg
+        self._init_params = lm_mod.init_params
+        self._opt_init, self._train_step = lm_mod.make_train_step(cfg, tcfg)
+
+    def init(self, key):
+        params = self._init_params(key, self.cfg)
+        return LMState(params=params, opt_state=self._opt_init(params),
+                       step=jnp.zeros((), jnp.int32))
+
+    def update(self, state: LMState, batch, hypers=None):
+        lr_scale = None if not hypers else hypers.get("lr_scale")
+        params, opt_state, metrics = self._train_step(
+            state.params, state.opt_state, batch, state.step,
+            lr_scale=lr_scale)
+        return LMState(params, opt_state, state.step + 1), metrics
+
+    def policy(self, actor_params, obs, key=None):
+        raise NotImplementedError("LM agents decode via repro.launch.serve")
+
+    def actor_params(self, pop_state):
+        return pop_state.params
+
+    def with_evolvable_params(self, pop_state, new_params):
+        return pop_state._replace(params=new_params)
+
+    def fitness_from_metrics(self, metrics):
+        return -metrics["loss"]
+
+
+class SharedCriticAgent(AgentBase):
+    """Adapter for the §4.2 shared-critic update (CEM-RL / DvD case studies).
+
+    State is ``repro.core.shared.SharedCriticState``: stacked per-member
+    policies + ONE shared critic, so the update consumes the whole
+    population at once.  ``dvd_coef_fn`` (set directly or by the ``DvD``
+    strategy) enables the determinant diversity term.
+    """
+    population_level = True
+
+    def __init__(self, obs_dim: int, act_dim: int, *, dvd_coef_fn=None,
+                 probe_size: int = 20, train_frac: float = 1.0):
+        from repro.core import shared
+        from repro.rl import td3
+        self._shared = shared
+        self._td3 = td3
+        self.obs_dim, self.act_dim = obs_dim, act_dim
+        self.dvd_coef_fn = dvd_coef_fn
+        self.probe_size = probe_size
+        self.train_frac = train_frac
+
+    def population_init(self, key, n: int):
+        return self._shared.init(key, self.obs_dim, self.act_dim, n)
+
+    def population_update(self, *, sequential: bool = False):
+        """The whole-population update fn: the paper's averaged-critic-loss
+        form, or the original CEM-RL interleaved ordering (baseline arm)."""
+        if sequential:
+            return self._shared.sequential_shared_critic_update()
+        return self._shared.make_shared_critic_update(
+            dvd_coef_fn=self.dvd_coef_fn, probe_size=self.probe_size,
+            train_frac=self.train_frac)
+
+    def update(self, state, batch, hypers=None):
+        raise TypeError("SharedCriticAgent is population_level; backends "
+                        "use population_update() instead of update()")
+
+    def policy(self, actor_params, obs, key=None):
+        return self._td3.policy(actor_params, obs, key)
+
+    def actor_params(self, pop_state):
+        return pop_state.policies
+
+    def with_evolvable_params(self, pop_state, new_params):
+        return pop_state._replace(
+            policies=new_params,
+            target_policies=jax.tree.map(jnp.copy, new_params))
+
+    def gather_members(self, pop_state, parents):
+        """Only the per-member components move; the shared critic (and the
+        scalar step/key) have no population axis."""
+        take = lambda tree: jax.tree.map(lambda x: x[parents], tree)
+        return pop_state._replace(
+            policies=take(pop_state.policies),
+            target_policies=take(pop_state.target_policies),
+            policy_opt=take(pop_state.policy_opt))

@@ -1,0 +1,188 @@
+"""``EvolutionStrategy``: one signature for every outer loop.
+
+The repo's three evolution mechanisms — PBT exploit/explore (Jaderberg et
+al. 2017), CEM distribution refitting (CEM-RL, Pourchot & Sigaud 2019) and
+DvD determinant diversity (Parker-Holder et al. 2020) — plus the null
+strategy all answer the same call:
+
+    evolve(key, pop_state, hypers, fitness) -> (pop_state, hypers, lineage)
+
+``lineage`` is an (N,) int array: ``lineage[i]`` is the member whose state
+member i now holds (``i`` for survivors, ``-1`` for members freshly drawn
+from a search distribution).  ``NoEvolution`` is the null object that makes
+population size 1 the degenerate case — no ``if n == 1`` branches anywhere.
+
+Strategies are driver-level objects (constructed once per run, invoked every
+``pbt_interval`` trainer steps), so distribution state (CEM's gaussian) may
+live on the instance rather than being threaded through jit.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.flatten_util import ravel_pytree
+
+from repro.configs.base import PopulationConfig
+from repro.core.cem import cem_init, cem_sample, cem_update
+from repro.core.dvd import dvd_coef_schedule
+from repro.core.hyperparams import sample_hypers
+from repro.core.pbt import pbt_step
+
+
+class EvolutionStrategy:
+    """Base class / protocol. Subclasses override ``evolve``."""
+
+    null = False  # True: trainer skips the evolve step entirely
+
+    def init_hypers(self, key, n: int):
+        """Per-member dynamic hyperparameters, or None."""
+        return None
+
+    def configure_agent(self, agent):
+        """Hook run before the update fn is built (e.g. DvD installs its
+        diversity-coefficient schedule on a shared-critic agent)."""
+
+    def bind(self, key, agent, pop_state):
+        """Hook run once at trainer init; may transform the initial
+        population (e.g. CEM draws members from its distribution)."""
+        return pop_state
+
+    # Internal strategy state (CEM's gaussian) must survive checkpoint /
+    # resume alongside the population itself.
+    def export_state(self):
+        return None
+
+    def import_state(self, state):
+        """Restore what ``export_state`` produced (no-op by default)."""
+
+    def evolve(self, key, pop_state, hypers, fitness):
+        raise NotImplementedError
+
+
+class NoEvolution(EvolutionStrategy):
+    """Population size 1 — or any run without an outer loop."""
+
+    null = True
+
+    def __init__(self, pcfg: PopulationConfig | None = None):
+        self.pcfg = pcfg
+
+    def evolve(self, key, pop_state, hypers, fitness):
+        return pop_state, hypers, jnp.arange(fitness.shape[0])
+
+
+class PBT(EvolutionStrategy):
+    """Truncation-selection PBT over training state + hyperparameters."""
+
+    def __init__(self, pcfg: PopulationConfig):
+        self.pcfg = pcfg
+        self._gather = None
+
+    def init_hypers(self, key, n: int):
+        space = self.pcfg.hyper_space
+        if not space.names:
+            return None
+        return sample_hypers(key, space, n)
+
+    def bind(self, key, agent, pop_state):
+        self._gather = agent.gather_members
+        return pop_state
+
+    def evolve(self, key, pop_state, hypers, fitness):
+        state, new_hypers, parents = pbt_step(
+            key, pop_state, {} if hypers is None else hypers, fitness,
+            self.pcfg, gather=self._gather)
+        return state, (None if hypers is None else new_hypers), parents
+
+
+class CEM(EvolutionStrategy):
+    """Diagonal-gaussian CEM over the agent's evolvable (policy) params.
+
+    ``bind`` centres the distribution on member 0 and redraws the initial
+    population from it; ``evolve`` refits on the elites and resamples every
+    member (lineage is all -1: nobody inherits a specific parent's state).
+    """
+
+    def __init__(self, pcfg: PopulationConfig):
+        self.pcfg = pcfg
+        self._agent = None
+        self.cem_state = None
+        self._unravel = None
+
+    def bind(self, key, agent, pop_state):
+        self._agent = agent
+        template = jax.tree.map(lambda x: x[0],
+                                agent.evolvable_params(pop_state))
+        self.cem_state, self._unravel = cem_init(
+            template, sigma_init=self.pcfg.sigma_init,
+            noise_init=self.pcfg.cem_noise_init)
+        n = jax.tree.leaves(pop_state)[0].shape[0]
+        return self._inject(key, pop_state, n)
+
+    def _inject(self, key, pop_state, n: int):
+        flat = cem_sample(key, self.cem_state, n)
+        new_params = jax.vmap(self._unravel)(flat)
+        return self._agent.with_evolvable_params(pop_state, new_params)
+
+    def export_state(self):
+        return self.cem_state
+
+    def import_state(self, state):
+        from repro.core.cem import CEMState
+        self.cem_state = CEMState(*state)
+
+    def evolve(self, key, pop_state, hypers, fitness):
+        n = fitness.shape[0]
+        flat = jax.vmap(lambda p: ravel_pytree(p)[0])(
+            self._agent.evolvable_params(pop_state))
+        self.cem_state = cem_update(self.cem_state, flat, fitness,
+                                    elite_frac=self.pcfg.elite_frac,
+                                    noise_decay=self.pcfg.cem_noise_decay)
+        pop_state = self._inject(key, pop_state, n)
+        return pop_state, hypers, jnp.full((n,), -1, jnp.int32)
+
+
+class DvD(EvolutionStrategy):
+    """Diversity via Determinants: selection pressure is replaced by the
+    -logdet kernel term inside the update loss, so ``evolve`` is the
+    identity; ``configure_agent`` installs the §B.2 coefficient schedule on
+    agents that support it (the shared-critic family)."""
+
+    def __init__(self, pcfg: PopulationConfig):
+        self.pcfg = pcfg
+
+    def configure_agent(self, agent):
+        if hasattr(agent, "dvd_coef_fn") and agent.dvd_coef_fn is None:
+            period = self.pcfg.dvd_period
+            agent.dvd_coef_fn = lambda step: dvd_coef_schedule(
+                step, period=period)
+
+    def evolve(self, key, pop_state, hypers, fitness):
+        return pop_state, hypers, jnp.arange(fitness.shape[0])
+
+
+STRATEGIES: dict[str, type] = {
+    "none": NoEvolution,
+    "pbt": PBT,
+    "cem": CEM,
+    "dvd": DvD,
+}
+
+
+def register_strategy(name: str, cls: type):
+    STRATEGIES[name] = cls
+
+
+def make_strategy(pcfg: PopulationConfig) -> EvolutionStrategy:
+    """Resolve ``pcfg.strategy``; size 1 is always the null strategy (the
+    degenerate case the unified API promises)."""
+    if pcfg.size <= 1:
+        return NoEvolution(pcfg)
+    name = pcfg.strategy
+    if isinstance(name, EvolutionStrategy):
+        return name
+    try:
+        return STRATEGIES[name](pcfg)
+    except KeyError:
+        raise ValueError(f"unknown strategy {name!r}; "
+                         f"registered: {sorted(STRATEGIES)}") from None

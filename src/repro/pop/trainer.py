@@ -1,0 +1,168 @@
+"""``PopTrainer`` — the single driver for population (and single-agent)
+training.
+
+Composes an ``Agent`` adapter, an ``EvolutionStrategy`` and an
+``UpdateBackend`` from one ``PopulationConfig``; population size 1 is just
+``NoEvolution`` over a 1-member stack, so every consumer (the LM train CLI,
+the RL examples, the benchmarks) runs the same code path.
+
+    agent = ModuleAgent(td3, obs_dim, act_dim)
+    pcfg = PopulationConfig(size=8, strategy="pbt", backend="vectorized",
+                            hyper_space=space, pbt_interval=10)
+    trainer = PopTrainer(agent, pcfg, seed=0)
+    for it in ...:
+        metrics, lineage = trainer.step(batches, fitness=returns)
+
+Responsibilities:
+  * population init (+ strategy binding, e.g. CEM's initial draw)
+  * the compiled update (backend + num_steps chaining + buffer donation)
+  * the fitness window, CAPPED at ``pcfg.fitness_window`` entries (the
+    unbounded-list leak of the old driver is gone)
+  * the evolve cadence (every ``pcfg.pbt_interval`` trainer steps; skipped
+    entirely for null strategies)
+  * checkpoint/resume via ``repro.checkpoint`` (state + hypers + step).
+"""
+from __future__ import annotations
+
+from collections import deque
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import PopulationConfig
+from repro.pop.backend import UpdateBackend, make_update
+from repro.pop.strategy import make_strategy
+
+
+class PopTrainer:
+    def __init__(self, agent, pcfg: PopulationConfig | None = None, *,
+                 seed: int = 0, key=None, strategy=None, mesh=None,
+                 checkpoint_dir=None, keep: int = 2):
+        self.agent = agent
+        self.pcfg = pcfg = pcfg if pcfg is not None else PopulationConfig()
+        self.n = pcfg.size
+        self.key = jax.random.PRNGKey(seed) if key is None else key
+        self.strategy = strategy if strategy is not None else \
+            make_strategy(pcfg)
+
+        self.key, k_init, k_bind, k_hyp = jax.random.split(self.key, 4)
+        self.state = agent.population_init(k_init, self.n)
+        self.strategy.configure_agent(agent)
+        self.state = self.strategy.bind(k_bind, agent, self.state)
+        self.hypers = self.strategy.init_hypers(k_hyp, self.n)
+
+        self._update = make_update(agent, pcfg.backend,
+                                   num_steps=pcfg.num_steps,
+                                   donate=pcfg.donate)
+        try:
+            backend = UpdateBackend(pcfg.backend)
+        except ValueError:
+            backend = pcfg.backend
+        if backend is UpdateBackend.SHARDED:
+            from repro.core.distributed import shard_population
+            from repro.launch.mesh import make_host_mesh
+            self.mesh = mesh if mesh is not None else make_host_mesh(model=1)
+            self.state = shard_population(self.state, self.mesh)
+        else:
+            self.mesh = mesh
+
+        self._window: deque = deque(maxlen=pcfg.fitness_window)
+        self.last_fitness = None  # the (N,) fitness used at the last evolve
+        self.step_count = 0
+        self._mgr = None
+        if checkpoint_dir is not None:
+            from repro.checkpoint import CheckpointManager
+            self._mgr = CheckpointManager(checkpoint_dir, keep=keep)
+
+    # ------------------------------------------------------------------ run
+    def step(self, batch, fitness=None):
+        """One update call (``pcfg.num_steps`` chained member-steps), plus —
+        on cadence — one evolve.  Returns ``(metrics, lineage)`` where
+        lineage is None unless evolution ran this step."""
+        self.state, metrics = self._update(self.state, batch, self.hypers)
+        self.step_count += 1
+        fit = fitness if fitness is not None \
+            else self.agent.fitness_from_metrics(metrics)
+        if fit is not None:
+            self._window.append(np.asarray(fit))
+        lineage = None
+        if (not self.strategy.null and self.pcfg.pbt_interval
+                and self.step_count % self.pcfg.pbt_interval == 0
+                and self._window):
+            lineage = self.evolve()
+        return metrics, lineage
+
+    def run(self, steps: int, batch_fn, *, on_step=None):
+        """Drive ``steps`` update calls.  ``batch_fn(step) -> batch``;
+        ``on_step(step, metrics, lineage)`` is the logging hook.  Fitness
+        comes from the agent's metrics; loops with environment-derived
+        fitness call ``step(batch, fitness=...)`` (or ``report_fitness``)
+        themselves."""
+        metrics = None
+        for step in range(self.step_count, steps):
+            metrics, lineage = self.step(batch_fn(step))
+            if on_step is not None:
+                on_step(step, metrics, lineage)
+        return metrics
+
+    # ---------------------------------------------------------------- evolve
+    def report_fitness(self, fitness):
+        """Feed externally-measured per-member fitness (episode returns)
+        into the window — for loops where evaluation happens outside
+        ``step`` (e.g. CEM's evaluate-after-training ordering)."""
+        self._window.append(np.asarray(fitness))
+
+    def fitness(self):
+        """Windowed-mean per-member fitness, shape (N,)."""
+        if not self._window:
+            return None
+        return np.mean(np.stack(self._window), axis=0)
+
+    def evolve(self):
+        self.last_fitness = self.fitness()
+        self.key, k = jax.random.split(self.key)
+        self.state, self.hypers, lineage = self.strategy.evolve(
+            k, self.state, self.hypers, jnp.asarray(self.last_fitness))
+        # pre-evolve fitness describes states that may just have been
+        # replaced; start the next window fresh
+        self._window.clear()
+        return lineage
+
+    # ------------------------------------------------------------ checkpoint
+    @property
+    def actors(self):
+        """Stacked per-member policy params (for rollout / serving)."""
+        return self.agent.actor_params(self.state)
+
+    def save(self, extra: dict | None = None, *, blocking: bool = False):
+        if self._mgr is None:
+            raise ValueError("PopTrainer built without checkpoint_dir")
+        save = self._mgr.save if blocking else self._mgr.save_async
+        save(self.step_count - 1,
+             (self.state, self.hypers, self.strategy.export_state()),
+             extra or {})
+
+    def resume(self):
+        """Restore the latest checkpoint if one exists (population state,
+        hypers, strategy internals, step); returns the restored step (the
+        value saved by ``save``) or None."""
+        if self._mgr is None or self._mgr.latest() is None:
+            return None
+        (state, hypers, strat_state), extra = self._mgr.restore(
+            (self.state, self.hypers, self.strategy.export_state()))
+        restored_n = jax.tree.leaves(self.agent.actor_params(state))[0].shape[0]
+        if restored_n != self.n:
+            raise ValueError(
+                f"checkpoint holds a population of {restored_n} but the "
+                f"config says size={self.n}; pass the original --population "
+                f"or start fresh (--resume none)")
+        self.state, self.hypers = state, hypers
+        if strat_state is not None:
+            self.strategy.import_state(strat_state)
+        self.step_count = extra["step"] + 1
+        return extra["step"]
+
+    def wait(self):
+        if self._mgr is not None:
+            self._mgr.wait()

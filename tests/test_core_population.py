@@ -95,6 +95,47 @@ def test_pbt_exploit_copies_top_and_preserves_size():
     np.testing.assert_allclose(np.asarray(got), np.asarray(want))
 
 
+def test_perturb_hypers_clips_to_prior_bounds():
+    from repro.core import perturb_hypers
+    hypers = sample_hypers(KEY, SPACE, N)
+    # push every member to the edge of the prior so scale^{+1} would escape
+    edged = {k: jnp.full_like(v, dict(
+        (n, hi) for n, _, hi in SPACE.log_uniform + SPACE.uniform)[k])
+        for k, v in hypers.items()}
+    mask = jnp.ones((N,), bool)
+    for seed in range(5):
+        out = perturb_hypers(jax.random.PRNGKey(seed), edged, SPACE, mask)
+        for name, lo, hi in SPACE.log_uniform + SPACE.uniform:
+            vals = np.asarray(out[name])
+            assert (vals >= lo - 1e-9).all() and (vals <= hi + 1e-9).all()
+
+
+def test_perturb_hypers_untouched_members_are_bit_identical():
+    from repro.core import perturb_hypers
+    hypers = sample_hypers(KEY, SPACE, N)
+    mask = jnp.asarray([True, False, True, False])
+    out = perturb_hypers(KEY, hypers, SPACE, mask)
+    for name in hypers:
+        np.testing.assert_array_equal(np.asarray(out[name])[~np.asarray(mask)],
+                                      np.asarray(hypers[name])[~np.asarray(mask)])
+
+
+def test_pbt_lineage_survivors_keep_identity_parents_from_topk():
+    pop = population_init(lambda k: td3.init(k, OBS, ACT), KEY, 8)
+    hypers = sample_hypers(KEY, SPACE, 8)
+    fitness = jnp.arange(8, dtype=jnp.float32)   # member 7 best
+    pcfg = PopulationConfig(size=8, exploit_frac=0.25, hyper_space=SPACE)
+    for seed in range(5):
+        _, _, parents = pbt_step(jax.random.PRNGKey(seed), pop, hypers,
+                                 fitness, pcfg)
+        parents = np.asarray(parents)
+        k = 2  # bottom/top 25% of 8
+        # survivors hold their own state
+        np.testing.assert_array_equal(parents[k:], np.arange(k, 8))
+        # replaced members draw parents from the top-k only
+        assert set(parents[:k]) <= {6, 7}
+
+
 def test_pbt_explored_hypers_stay_in_bounds():
     pop = population_init(lambda k: td3.init(k, OBS, ACT), KEY, N)
     hypers = sample_hypers(KEY, SPACE, N)

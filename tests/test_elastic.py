@@ -38,6 +38,7 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=%d"
 import sys, json
 import jax, jax.numpy as jnp
 import numpy as np
+from repro import compat
 from repro.checkpoint import CheckpointManager
 from repro.configs import get_config, TrainConfig
 from repro.launch.elastic import plan_mesh, relayout
@@ -58,7 +59,7 @@ else:
     params, extra = mgr.restore(template)
     params = relayout(params, mesh)   # new (smaller) mesh
     batch = {"tokens": jax.random.randint(key, (2, 32), 0, cfg.vocab_size)}
-    with jax.sharding.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         loss, _ = L.lm_loss(params, cfg, batch)
     print(json.dumps({"mesh": dict(mesh.shape), "step": extra["step"],
                       "loss": float(loss), "ok": bool(np.isfinite(float(loss)))}))

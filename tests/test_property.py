@@ -2,6 +2,10 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+# hypothesis is optional in the CI image; skip the whole module without it
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.configs.base import HyperSpace, PopulationConfig
