@@ -5,7 +5,8 @@
 CSV rows go to stdout (``name,...,derived`` per the repo convention):
   population_update — paper Fig. 2 (update speed vs implementation x pop)
   shared_critic     — paper Fig. 4 (§4.2 shared-critic update)
-  env_step          — paper Table 2 (per-interaction time)
+  actor_loop        — (§4) fused vs unfused full train iteration
+  env_step          — paper Table 2 (steady-state per-interaction time)
   compile_time      — paper Table 3 (initial compilation, pop of 20)
   roofline          — (ours) dry-run three-term roofline per arch x shape
 """
@@ -25,8 +26,8 @@ def main():
                     help="comma-separated subset of bench names")
     args = ap.parse_args()
 
-    from benchmarks import (compile_time, env_step, population_update,
-                            roofline, shared_critic)
+    from benchmarks import (actor_loop, compile_time, env_step,
+                            population_update, roofline, shared_critic)
     sel = set(args.only.split(",")) if args.only else None
 
     def want(name):
@@ -38,6 +39,11 @@ def main():
                                   agents=("td3",), iters=2)
         else:
             population_update.run()
+    if want("actor_loop"):
+        if args.fast:
+            actor_loop.run(pop_sizes=(1, 2, 4), collect_steps=64, iters=3)
+        else:
+            actor_loop.run()
     if want("shared_critic"):
         shared_critic.run(pop_sizes=(2, 4) if args.fast else (2, 4, 8, 16),
                           iters=2 if args.fast else 3)

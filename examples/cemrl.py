@@ -6,83 +6,60 @@ against ONE shared critic (``train_frac=0.5``, CEM-RL Algorithm 1) — the
 paper's second-order modification averages the critic loss over the trainees
 so the whole update is a single compiled call — then everyone is evaluated
 and ``CEM.evolve`` refits the distribution on the elite half and redraws the
-members.  Swapping ``backend="vectorized"`` for ``"sequential"`` runs the
-ORIGINAL CEM-RL interleaved ordering (the paper's baseline arm); swapping
-``strategy="cem"`` for ``"pbt"`` turns the same loop into PBT over the
-shared-critic population.
+members.  Acting goes through ``repro.rollout``: the fused iteration
+collects into per-member device-resident buffers and chains ``rl_steps``
+shared-critic updates, and Algorithm 1's train -> evaluate -> refit ordering
+is exactly ``run_env_loop`` with ``pbt_interval=1``.  Swapping
+``backend="vectorized"`` for ``"sequential"`` runs the ORIGINAL CEM-RL
+interleaved ordering (the paper's baseline arm); swapping ``strategy="cem"``
+for ``"pbt"`` turns the same loop into PBT over the shared-critic
+population.
 
     PYTHONPATH=src python examples/cemrl.py [--population 10] [--iters 20]
 """
 import argparse
 import time
 
-import jax
 import jax.numpy as jnp
 
 from repro.configs.base import PopulationConfig
-from repro.data import buffer_add, buffer_init, buffer_sample
-from repro.envs import make, rollout
+from repro.envs import make
 from repro.pop import PopTrainer, SharedCriticAgent
-from repro.rl import td3
 
 
-def run(population=10, iters=20, rl_steps=64, collect_steps=200,
+def run(population=10, iters=20, rl_steps=64, collect_steps=100,
         strategy="cem", backend="vectorized", seed=0):
     env = make("pendulum")
     obs_dim, act_dim = env.spec.obs_dim, env.spec.act_dim
-    key = jax.random.PRNGKey(seed)
     n = population
 
-    # pbt_interval=0: the CEM refit is driven explicitly below, AFTER the
-    # post-training evaluation (Algorithm 1 ordering: sample -> train half
-    # -> evaluate all -> refit on what was evaluated)
+    # pbt_interval=1: evolve fires every iteration, AFTER the post-training
+    # evaluation (Algorithm 1 ordering: sample -> train half -> evaluate all
+    # -> refit on what was evaluated)
     pcfg = PopulationConfig(size=n, strategy=strategy, backend=backend,
-                            pbt_interval=0, elite_frac=0.5, sigma_init=1e-2,
+                            num_steps=rl_steps, pbt_interval=1,
+                            elite_frac=0.5, sigma_init=1e-2,
                             fitness_window=1)
     trainer = PopTrainer(SharedCriticAgent(obs_dim, act_dim, train_frac=0.5),
                          pcfg, seed=seed)
+    trainer.attach_rollout(env, num_envs=2, collect_steps=collect_steps,
+                           batch_size=128, buffer_capacity=50_000,
+                           eval_envs=2)
 
-    buf = buffer_init(50_000, {
-        "obs": jnp.zeros((obs_dim,)), "action": jnp.zeros((act_dim,)),
-        "reward": jnp.zeros(()), "next_obs": jnp.zeros((obs_dim,)),
-        "done": jnp.zeros(())})
-    evaluate = jax.jit(lambda actors, keys: jax.vmap(
-        lambda a, k: rollout(env, lambda p, o, kk: td3.policy(
-            p, o, None), a, k, collect_steps))(actors, keys))
-
-    mean_return = float("nan")
     t0 = time.time()
-    for it in range(iters):
-        key, k2 = jax.random.split(key)
+    result = {"mean": float("nan")}
 
-        # 1. train: TD3 updates of the first half against the shared critic
-        for _ in range(rl_steps):
-            key, kb = jax.random.split(key)
-            if int(buf.total) < 256:
-                break
-            batch = jax.vmap(lambda kk: buffer_sample(buf, kk, 128))(
-                jax.random.split(kb, n))
-            trainer.step(batch)
-
-        # 2. evaluate everyone AFTER training (these returns belong to the
-        #    parameters the refit will flatten)
-        traj = evaluate(trainer.actors, jax.random.split(k2, n))
-        buf = buffer_add(buf, jax.tree.map(
-            lambda x: x.reshape((-1,) + x.shape[2:]), traj))
-        returns = traj["reward"].sum(-1)
-
-        # 3. refit the distribution on the elites and redraw the members
-        trainer.report_fitness(returns)
-        trainer.evolve()
-
-        mean_return = float(jnp.mean(returns))
+    def on_iter(it, metrics, stats, fitness, lineage):
+        result["mean"] = float(jnp.mean(fitness))
         sigma = float(jnp.mean(trainer.strategy.cem_state.var)) \
             if strategy == "cem" else float("nan")
-        print(f"iter {it + 1}: mean return {mean_return:+.2f} "
-              f"best {float(returns.max()):+.2f} "
+        print(f"iter {it + 1}: mean fitness {result['mean']:+.2f} "
+              f"best {float(fitness.max()):+.2f} "
               f"sigma {sigma:.2e} "
               f"({time.time() - t0:.1f}s)", flush=True)
-    return mean_return
+
+    trainer.run_env_loop(iters, eval_every=1, on_iter=on_iter)
+    return result["mean"]
 
 
 if __name__ == "__main__":

@@ -4,8 +4,11 @@ determinant diversity term.
 ``strategy="dvd"`` installs the §B.2 diversity-coefficient schedule on the
 shared-critic agent — selection pressure comes from the joint -logdet(RBF
 kernel) term inside the actor loss, so the evolve step is the identity.
-Swapping to ``strategy="pbt"`` (one line) trades the diversity loss for
-exploit/explore selection over the same population.
+Acting runs through the ``repro.rollout`` fused iteration (per-member
+batched envs + device-resident buffers + chained updates in one jitted
+call); the behavior probe for the diversity diagnostic is sampled from the
+engine's replay buffers.  Swapping to ``strategy="pbt"`` (one line) trades
+the diversity loss for exploit/explore selection over the same population.
 
     PYTHONPATH=src python examples/dvd.py [--population 5] [--iters 20]
 """
@@ -13,56 +16,45 @@ import argparse
 import time
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs.base import PopulationConfig
 from repro.core.dvd import behavior_embedding, dvd_loss
-from repro.data import buffer_add, buffer_init, buffer_sample
-from repro.envs import make, rollout
+from repro.envs import make
 from repro.pop import PopTrainer, SharedCriticAgent
 from repro.rl import networks as nets
-from repro.rl import td3
 
 
-def run(population=5, iters=20, collect_steps=200, updates_per_iter=32,
+def run(population=5, iters=20, collect_steps=100, updates_per_iter=32,
         strategy="dvd", seed=0):
     env = make("reacher")  # multi-goal env where diversity matters
     obs_dim, act_dim = env.spec.obs_dim, env.spec.act_dim
-    key = jax.random.PRNGKey(seed)
     n = population
 
     pcfg = PopulationConfig(size=n, strategy=strategy, dvd_period=400,
-                            pbt_interval=updates_per_iter, exploit_frac=0.2,
-                            fitness_window=updates_per_iter)
+                            num_steps=updates_per_iter, pbt_interval=1,
+                            exploit_frac=0.2, fitness_window=1)
     trainer = PopTrainer(SharedCriticAgent(obs_dim, act_dim), pcfg, seed=seed)
+    engine = trainer.attach_rollout(env, num_envs=2,
+                                    collect_steps=collect_steps,
+                                    batch_size=128, buffer_capacity=50_000,
+                                    eval_envs=2)
 
-    buf = buffer_init(50_000, {
-        "obs": jnp.zeros((obs_dim,)), "action": jnp.zeros((act_dim,)),
-        "reward": jnp.zeros(()), "next_obs": jnp.zeros((obs_dim,)),
-        "done": jnp.zeros(())})
-    collect = jax.jit(lambda actors, keys: jax.vmap(
-        lambda a, k: rollout(env, td3.policy, a, k, collect_steps)
-    )(actors, keys))
-
-    returns = None
+    key = jax.random.PRNGKey(seed + 1)
     t0 = time.time()
-    for it in range(iters):
-        key, k1, k2 = jax.random.split(key, 3)
-        traj = collect(trainer.actors, jax.random.split(k1, n))
-        buf = buffer_add(buf, jax.tree.map(
-            lambda x: x.reshape((-1,) + x.shape[2:]), traj))
-        returns = traj["reward"].sum(-1)
-        for _ in range(updates_per_iter):
-            key, ks = jax.random.split(key)
-            batch = jax.vmap(lambda kk: buffer_sample(buf, kk, 128))(
-                jax.random.split(ks, n))
-            trainer.step(batch, fitness=returns)
-        probe = buffer_sample(buf, k2, 20)["obs"]
+    result = {"best": float("nan")}
+
+    def on_iter(it, metrics, stats, fitness, lineage):
+        nonlocal key
+        key, kp = jax.random.split(key)
+        result["best"] = float(fitness.max())
+        probe = engine.probe_obs(kp, 20)
         emb = behavior_embedding(nets.actor_apply, trainer.actors, probe)
-        print(f"iter {it + 1}: best return {float(returns.max()):+.2f} "
+        print(f"iter {it + 1}: best fitness {result['best']:+.2f} "
               f"diversity {-float(dvd_loss(emb)):.3f} "
               f"({time.time() - t0:.1f}s)", flush=True)
-    return float(returns.max())
+
+    trainer.run_env_loop(iters, eval_every=1, on_iter=on_iter)
+    return result["best"]
 
 
 if __name__ == "__main__":

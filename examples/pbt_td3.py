@@ -1,84 +1,80 @@
 """End-to-end PBT case study (paper §5.1), scaled to this machine.
 
 Trains a population of TD3 agents on the pure-JAX pendulum environment with
-the full production loop through ``PopTrainer``: vectorized data collection
--> per-member replay buffers -> chained vectorized update steps
-(``num_steps`` in the config) -> on-device PBT exploit/explore ->
-checkpointing.  The same script trains a single-seed baseline by passing
-``--population 1`` — no separate code path.
+the full production loop: ``PopTrainer`` owns the update/evolve side and the
+``repro.rollout`` engine owns the acting side — per-member batched envs,
+population replay buffers, and the FUSED collect -> insert -> sample ->
+update iteration, so one jitted call per iteration runs without leaving the
+device.  Per-member exploration noise comes from each member's PBT-tuned
+``explore_noise`` hyperparameter; fitness comes from the deterministic
+evaluator.
+The same script trains a single-seed baseline by passing ``--population 1``
+— no separate code path.
 
     PYTHONPATH=src python examples/pbt_td3.py [--population 8] [--iters 30]
 """
 import argparse
 import time
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import HyperSpace, PopulationConfig
-from repro.data import buffer_add, buffer_init, buffer_sample
-from repro.envs import make, rollout
+from repro.envs import make
 from repro.pop import ModuleAgent, PopTrainer
 from repro.rl import td3
 
+# "noise" is TD3's target-policy-smoothing sigma (update side);
+# "explore_noise" drives the Collector's acting-time gaussian — separate
+# hypers so PBT can anneal exploration without touching the critic targets
 SPACE = HyperSpace(
     log_uniform=(("actor_lr", 3e-5, 3e-3), ("critic_lr", 3e-5, 3e-3)),
     uniform=(("policy_freq", 0.2, 1.0), ("noise", 0.0, 1.0),
-             ("discount", 0.9, 1.0)))
+             ("explore_noise", 0.0, 1.0), ("discount", 0.9, 1.0)))
 
 
-def run(population=8, iters=30, steps_per_iter=128, batch_size=128,
-        pbt_every=10, backend="vectorized", ckpt_dir="/tmp/pbt_td3_ckpt",
-        seed=0):
+def run(population=8, iters=30, num_envs=4, collect_steps=32,
+        updates_per_iter=64, batch_size=128, pbt_every=10,
+        backend="vectorized", ckpt_dir="/tmp/pbt_td3_ckpt", seed=0):
     env = make("pendulum")
-    key = jax.random.PRNGKey(seed)
     n = population
     pcfg = PopulationConfig(
-        size=n, strategy="pbt", backend=backend,
-        num_steps=steps_per_iter // 2, pbt_interval=pbt_every,
-        exploit_frac=0.3, hyper_space=SPACE, fitness_window=5, donate=False)
+        size=n, strategy="pbt", backend=backend, num_steps=updates_per_iter,
+        pbt_interval=pbt_every, exploit_frac=0.3, hyper_space=SPACE,
+        fitness_window=5, donate=False)  # async checkpoints read the state
     trainer = PopTrainer(ModuleAgent(td3, env.spec.obs_dim, env.spec.act_dim),
                          pcfg, seed=seed, checkpoint_dir=ckpt_dir)
+    trainer.attach_rollout(env, num_envs=num_envs,
+                           collect_steps=collect_steps,
+                           batch_size=batch_size, buffer_capacity=20_000,
+                           eval_envs=2)
 
-    bufs = jax.vmap(lambda _: buffer_init(20_000, {
-        "obs": jnp.zeros((env.spec.obs_dim,)),
-        "action": jnp.zeros((env.spec.act_dim,)),
-        "reward": jnp.zeros(()), "next_obs": jnp.zeros((env.spec.obs_dim,)),
-        "done": jnp.zeros(())}))(jnp.arange(n))
-
-    collect = jax.jit(lambda actors, keys: jax.vmap(
-        lambda a, k: rollout(env, td3.policy, a, k, steps_per_iter)
-    )(actors, keys))
-    sample = jax.jit(jax.vmap(lambda b, k: jax.vmap(
-        lambda kk: buffer_sample(b, kk, batch_size)
-    )(jax.random.split(k, steps_per_iter // 2))))
-
-    returns = None
     t0 = time.time()
-    for it in range(iters):
-        key, kc, ks = jax.random.split(key, 3)
-        traj = collect(trainer.actors, jax.random.split(kc, n))
-        bufs = jax.vmap(buffer_add)(bufs, traj)
-        returns = traj["reward"].sum(-1) * (200 / steps_per_iter)
+    last = {"fitness": None}
 
-        batches = sample(bufs, jax.random.split(ks, n))
-        # batches: (n, k, B, ...) -> (k, n, B, ...) for the chained protocol
-        batches = jax.tree.map(lambda x: jnp.swapaxes(x, 0, 1), batches)
-        _, lineage = trainer.step(batches, fitness=returns)
-
+    def on_iter(it, metrics, stats, fitness, lineage):
+        if fitness is not None:
+            last["fitness"] = fitness
         if lineage is not None:
             fit = trainer.last_fitness
             print(f"[pbt] iter {it + 1} fitness best={float(fit.max()):+.1f} "
                   f"parents={np.asarray(lineage)}")
         if (it + 1) % 10 == 0:
             trainer.save()
-            print(f"iter {it + 1}: best return {float(returns.max()):+.2f} "
-                  f"mean {float(returns.mean()):+.2f} "
+            print(f"iter {it + 1}: best fitness "
+                  f"{float(last['fitness'].max()):+.2f} "
+                  f"mean {float(last['fitness'].mean()):+.2f} "
+                  f"episodes {int(np.asarray(stats['episodes']).sum())} "
                   f"({time.time() - t0:.1f}s)", flush=True)
+
+    # eval_every=2 with fitness_window=5 and pbt_interval=10: exactly the
+    # five evals PBT will consume land in the window each evolve cycle —
+    # evaluating every iteration would just feed the deque's trash can
+    trainer.run_env_loop(iters, eval_every=2, on_iter=on_iter)
     trainer.wait()
-    best = float(np.max(np.asarray(returns)))
-    print(f"done: best final return {best:+.2f} in {time.time() - t0:.1f}s")
+    if last["fitness"] is None:  # iters < eval_every: score the pop now
+        last["fitness"] = np.asarray(trainer.evaluate_fitness())
+    best = float(np.max(last["fitness"]))
+    print(f"done: best final fitness {best:+.2f} in {time.time() - t0:.1f}s")
     return best
 
 

@@ -50,6 +50,17 @@ def buffer_can_sample(buf: ReplayBuffer, batch_size: int):
 
 
 def buffer_sample(buf: ReplayBuffer, key, batch_size: int):
+    """Uniform sample of ``batch_size`` stored items (with replacement).
+
+    Sampling an empty buffer is a bug (it would return the all-zero
+    initialization as if it were data): callers inside ``jit``/``vmap`` must
+    gate on ``buffer_can_sample`` (the fused train iteration in
+    ``repro.rollout.engine`` does); eagerly we can and do refuse outright.
+    """
+    if not isinstance(buf.total, jax.core.Tracer) and int(buf.total) == 0:
+        raise ValueError(
+            "buffer_sample called on an empty buffer; gate on "
+            "buffer_can_sample(buf, batch_size) first")
     capacity = jax.tree.leaves(buf.data)[0].shape[0]
     limit = jnp.minimum(buf.total, capacity)
     idx = jax.random.randint(key, (batch_size,), 0, jnp.maximum(limit, 1))

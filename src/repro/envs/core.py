@@ -9,13 +9,29 @@ accelerator.
 API (functional):
     env = make("pendulum")
     state, obs = env.reset(key)
-    state, obs, reward, done = env.step(state, action)
-Auto-reset on ``done`` is built into ``step`` (state carries its own rng).
+    state, obs, reward, done, truncated = env.step(state, action)
+    policy_input = env.observe(state)
+
+Env step functions report only true TERMINATION (cartpole falling,
+mountain-car reaching the goal, acrobot swinging up); the ``make`` wrapper
+adds the ``spec.episode_length`` time limit as TRUNCATION and auto-resets on
+either (state carries its own rng).  ``done = terminated | truncated`` ends
+the episode, but TD targets must bootstrap THROUGH a truncation — only
+``done & ~truncated`` belongs in a replay transition's ``done`` field
+(``VecEnv``/``rollout`` store it that way).
+
+Terminal-observation contract: on a ``done`` step, the ``obs`` returned by
+``step`` is the observation of the **pre-reset terminal state** (the
+correct ``next_obs`` for TD bootstrapping), while the returned state has
+already been reset — so the next policy input must come from
+``env.observe(state)``, never from the returned ``obs``.  ``rollout`` and
+``repro.rollout.VecEnv`` both follow this protocol; mixing the two
+observations up is exactly the cross-episode-bootstrapping bug the
+regression tests in ``tests/test_rollout.py`` pin down.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
-from functools import partial
 from typing import Callable
 
 import jax
@@ -35,8 +51,10 @@ class EnvSpec:
 @dataclass(frozen=True)
 class Env:
     spec: EnvSpec
-    reset: Callable
-    step: Callable
+    reset: Callable         # key -> (state, obs)
+    step: Callable          # (state, action) ->
+                            #   (state, obs, reward, done, truncated)
+    observe: Callable       # state -> obs (post-auto-reset policy input)
 
 
 # ---------------------------------------------------------------------------
@@ -72,11 +90,9 @@ def _pendulum_step(state, action):
     thdot = thdot + (3 * g / (2 * l) * jnp.sin(th) + 3.0 / (m * l ** 2) * u) * dt
     thdot = jnp.clip(thdot, -_PEND["max_speed"], _PEND["max_speed"])
     th = th + thdot * dt
-    t = state["t"] + 1
-    done = t >= 200
-    new = dict(state, theta=th, thetadot=thdot, t=t)
-    return _auto_reset(_pendulum_reset, new, done), _pendulum_obs(new), \
-        -cost / 10.0, done
+    new = dict(state, theta=th, thetadot=thdot, t=state["t"] + 1)
+    # never terminates; episodes end by the wrapper's time-limit truncation
+    return new, _pendulum_obs(new), -cost / 10.0, jnp.zeros((), bool)
 
 
 # ---------------------------------------------------------------------------
@@ -104,10 +120,8 @@ def _reacher_step(state, action):
     pos = jnp.clip(state["pos"] + 0.1 * vel, -2.0, 2.0)
     dist = jnp.linalg.norm(pos - state["target"])
     reward = -dist - 0.01 * jnp.sum(a ** 2)
-    t = state["t"] + 1
-    done = t >= 100
-    new = dict(state, pos=pos, vel=vel, t=t)
-    return _auto_reset(_reacher_reset, new, done), _reacher_obs(new), reward, done
+    new = dict(state, pos=pos, vel=vel, t=state["t"] + 1)
+    return new, _reacher_obs(new), reward, jnp.zeros((), bool)
 
 
 # ---------------------------------------------------------------------------
@@ -135,42 +149,152 @@ def _cartpole_step(state, action):
     thacc = (gravity * sth - cth * tmp) / (lp * (4.0 / 3 - mp * cth ** 2 / (mc + mp)))
     xacc = tmp - mp * lp * thacc * cth / (mc + mp)
     nx = jnp.stack([x + dt * xd, xd + dt * xacc, th + dt * thd, thd + dt * thacc])
-    t = state["t"] + 1
     fail = (jnp.abs(nx[0]) > 2.4) | (jnp.abs(nx[2]) > 0.2095)
-    done = fail | (t >= 500)
     reward = 1.0 - fail.astype(jnp.float32)
-    new = dict(state, x=nx, t=t)
-    return _auto_reset(_cartpole_reset, new, done), _cartpole_obs(new), reward, done
+    new = dict(state, x=nx, t=state["t"] + 1)
+    return new, _cartpole_obs(new), reward, fail
+
+
+# ---------------------------------------------------------------------------
+# mountain_car (continuous; sparse-reward exploration scenario)
+# ---------------------------------------------------------------------------
+
+_MC = dict(power=0.0015, min_pos=-1.2, max_pos=0.6, max_speed=0.07,
+           goal_pos=0.45)
+
+
+def _mountain_car_obs(s):
+    return jnp.stack([s["pos"], s["vel"]], -1)
+
+
+def _mountain_car_reset(key):
+    k1, k2 = jax.random.split(key)
+    state = {"pos": jax.random.uniform(k1, (), minval=-0.6, maxval=-0.4),
+             "vel": jnp.zeros(()),
+             "t": jnp.zeros((), jnp.int32), "key": k2}
+    return state, _mountain_car_obs(state)
+
+
+def _mountain_car_step(state, action):
+    force = jnp.clip(action[..., 0], -1.0, 1.0)
+    vel = state["vel"] + force * _MC["power"] - 0.0025 * jnp.cos(3 * state["pos"])
+    vel = jnp.clip(vel, -_MC["max_speed"], _MC["max_speed"])
+    pos = jnp.clip(state["pos"] + vel, _MC["min_pos"], _MC["max_pos"])
+    vel = jnp.where((pos <= _MC["min_pos"]) & (vel < 0), 0.0, vel)
+    goal = pos >= _MC["goal_pos"]
+    reward = 100.0 * goal.astype(jnp.float32) - 0.1 * force ** 2
+    new = dict(state, pos=pos, vel=vel, t=state["t"] + 1)
+    return new, _mountain_car_obs(new), reward, goal
+
+
+# ---------------------------------------------------------------------------
+# acrobot (discrete, 3 actions; the harder DQN scenario — 2-link swing-up)
+# ---------------------------------------------------------------------------
+
+_ACRO = dict(m=1.0, l=1.0, lc=0.5, i=1.0, g=9.8, dt=0.2,
+             max_vel1=4 * jnp.pi, max_vel2=9 * jnp.pi)
+
+
+def _acrobot_obs(s):
+    th1, th2, d1, d2 = (s["q"][i] for i in range(4))
+    return jnp.stack([jnp.cos(th1), jnp.sin(th1), jnp.cos(th2), jnp.sin(th2),
+                      d1 / _ACRO["max_vel1"], d2 / _ACRO["max_vel2"]], -1)
+
+
+def _acrobot_reset(key):
+    k1, k2 = jax.random.split(key)
+    state = {"q": jax.random.uniform(k1, (4,), minval=-0.1, maxval=0.1),
+             "t": jnp.zeros((), jnp.int32), "key": k2}
+    return state, _acrobot_obs(state)
+
+
+def _acrobot_dsdt(q, torque):
+    m, l, lc, i, g = (_ACRO[k] for k in ("m", "l", "lc", "i", "g"))
+    th1, th2, dth1, dth2 = q[0], q[1], q[2], q[3]
+    d1 = m * lc ** 2 + m * (l ** 2 + lc ** 2 + 2 * l * lc * jnp.cos(th2)) + 2 * i
+    d2 = m * (lc ** 2 + l * lc * jnp.cos(th2)) + i
+    phi2 = m * lc * g * jnp.cos(th1 + th2 - jnp.pi / 2)
+    phi1 = (-m * l * lc * dth2 ** 2 * jnp.sin(th2)
+            - 2 * m * l * lc * dth2 * dth1 * jnp.sin(th2)
+            + (m * lc + m * l) * g * jnp.cos(th1 - jnp.pi / 2) + phi2)
+    ddth2 = ((torque + d2 / d1 * phi1 - m * l * lc * dth1 ** 2 * jnp.sin(th2)
+              - phi2) / (m * lc ** 2 + i - d2 ** 2 / d1))
+    ddth1 = -(d2 * ddth2 + phi1) / d1
+    return jnp.stack([dth1, dth2, ddth1, ddth2])
+
+
+def _acrobot_step(state, action):
+    torque = action.astype(jnp.float32) - 1.0   # {0,1,2} -> {-1,0,+1}
+    q, dt = state["q"], _ACRO["dt"]
+    # RK4 over the continuous dynamics (gym's integrator)
+    k1 = _acrobot_dsdt(q, torque)
+    k2 = _acrobot_dsdt(q + dt / 2 * k1, torque)
+    k3 = _acrobot_dsdt(q + dt / 2 * k2, torque)
+    k4 = _acrobot_dsdt(q + dt * k3, torque)
+    nq = q + dt / 6 * (k1 + 2 * k2 + 2 * k3 + k4)
+    wrap = lambda x: ((x + jnp.pi) % (2 * jnp.pi)) - jnp.pi
+    nq = jnp.stack([wrap(nq[0]), wrap(nq[1]),
+                    jnp.clip(nq[2], -_ACRO["max_vel1"], _ACRO["max_vel1"]),
+                    jnp.clip(nq[3], -_ACRO["max_vel2"], _ACRO["max_vel2"])])
+    solved = -jnp.cos(nq[0]) - jnp.cos(nq[1] + nq[0]) > 1.0
+    reward = jnp.where(solved, 0.0, -1.0)
+    new = dict(state, q=nq, t=state["t"] + 1)
+    return new, _acrobot_obs(new), reward, solved
 
 
 # ---------------------------------------------------------------------------
 
 
-def _auto_reset(reset_fn, state, done):
-    k_next, k_reset = jax.random.split(state["key"])
-    fresh, _ = reset_fn(k_reset)
-    fresh = dict(fresh, key=k_next)
-    state = dict(state, key=k_next)
-    return jax.tree.map(lambda a, b: jnp.where(done, a, b), fresh, state)
+def _with_auto_reset(reset_fn, raw_step, episode_length: int):
+    """Generic time limit + auto-reset.  The raw step reports only true
+    termination; the wrapper adds ``spec.episode_length`` truncation and
+    resets on either.  The returned ``obs`` stays the pre-reset terminal
+    observation (the transition's correct ``next_obs``); the returned state
+    is reset where the episode ended so the loop continues fresh."""
+    def step(state, action):
+        new, obs, reward, terminated = raw_step(state, action)
+        truncated = ~terminated & (new["t"] >= episode_length)
+        done = terminated | truncated
+        k_next, k_reset = jax.random.split(new["key"])
+        fresh, _ = reset_fn(k_reset)
+        fresh = dict(fresh, key=k_next)
+        new = dict(new, key=k_next)
+        state = jax.tree.map(lambda a, b: jnp.where(done, a, b), fresh, new)
+        return state, obs, reward, done, truncated
+    return step
 
 
 _REGISTRY = {
     "pendulum": (EnvSpec("pendulum", 3, 1, False, 200, 1.0),
-                 _pendulum_reset, _pendulum_step),
+                 _pendulum_reset, _pendulum_step, _pendulum_obs),
     "reacher": (EnvSpec("reacher", 6, 2, False, 100, 1.0),
-                _reacher_reset, _reacher_step),
+                _reacher_reset, _reacher_step, _reacher_obs),
     "cartpole": (EnvSpec("cartpole", 4, 2, True, 500),
-                 _cartpole_reset, _cartpole_step),
+                 _cartpole_reset, _cartpole_step, _cartpole_obs),
+    "mountain_car": (EnvSpec("mountain_car", 2, 1, False, 200, 1.0),
+                     _mountain_car_reset, _mountain_car_step,
+                     _mountain_car_obs),
+    "acrobot": (EnvSpec("acrobot", 6, 3, True, 500),
+                _acrobot_reset, _acrobot_step, _acrobot_obs),
 }
 
 
 def make(name: str) -> Env:
-    spec, reset, step = _REGISTRY[name]
-    return Env(spec=spec, reset=reset, step=step)
+    spec, reset, raw_step, observe = _REGISTRY[name]
+    return Env(spec=spec, reset=reset,
+               step=_with_auto_reset(reset, raw_step, spec.episode_length),
+               observe=observe)
 
 
 def rollout(env: Env, policy_fn, params, key, num_steps: int):
-    """Collect a trajectory with a jitted scan. policy_fn(params, obs, key)."""
+    """Collect a trajectory with a jitted scan. policy_fn(params, obs, key).
+
+    Follows the terminal-observation contract: on a done step ``next_obs``
+    is the pre-reset terminal observation, and the *next* transition's
+    ``obs`` is the post-reset ``env.observe(state)`` — no transition ever
+    straddles an episode boundary.  The stored ``done`` is termination only
+    (``done & ~truncated``): TD targets bootstrap through time limits.
+    """
     state, obs = env.reset(key)
 
     def body(carry, _):
@@ -178,10 +302,11 @@ def rollout(env: Env, policy_fn, params, key, num_steps: int):
         k = state["key"]
         ka, _ = jax.random.split(k)
         action = policy_fn(params, obs, ka)
-        nstate, nobs, reward, done = env.step(state, action)
+        nstate, terminal_obs, reward, done, truncated = env.step(state, action)
         trans = {"obs": obs, "action": action, "reward": reward,
-                 "next_obs": nobs, "done": done.astype(jnp.float32)}
-        return (nstate, nobs), trans
+                 "next_obs": terminal_obs,
+                 "done": (done & ~truncated).astype(jnp.float32)}
+        return (nstate, env.observe(nstate)), trans
 
     (_, _), traj = jax.lax.scan(body, (state, obs), None, length=num_steps)
     return traj

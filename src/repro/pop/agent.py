@@ -50,6 +50,11 @@ class AgentBase:
     """Default implementations shared by the adapters."""
     population_level = False
 
+    # The functional RL module whose ``policy`` drives acting-time
+    # exploration (``repro.rollout`` builds the exploration policy from its
+    # DEFAULT_HYPERS); None means the agent only offers ``policy`` itself.
+    exploration_module = None
+
     def population_init(self, key, n: int):
         return population_init(self.init, key, n)
 
@@ -82,6 +87,7 @@ class ModuleAgent(AgentBase):
     def __init__(self, module, obs_dim: int, act_dim: int, *,
                  actor_field: str | None = None, **init_kwargs):
         self.module = module
+        self.exploration_module = module
         self.obs_dim, self.act_dim = obs_dim, act_dim
         self.init_kwargs = init_kwargs
         self._actor_field = actor_field
@@ -173,6 +179,7 @@ class SharedCriticAgent(AgentBase):
         from repro.rl import td3
         self._shared = shared
         self._td3 = td3
+        self.exploration_module = td3
         self.obs_dim, self.act_dim = obs_dim, act_dim
         self.dvd_coef_fn = dvd_coef_fn
         self.probe_size = probe_size

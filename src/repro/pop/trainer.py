@@ -70,6 +70,7 @@ class PopTrainer:
         self._window: deque = deque(maxlen=pcfg.fitness_window)
         self.last_fitness = None  # the (N,) fitness used at the last evolve
         self.step_count = 0
+        self._rollout = None
         self._mgr = None
         if checkpoint_dir is not None:
             from repro.checkpoint import CheckpointManager
@@ -85,13 +86,8 @@ class PopTrainer:
         fit = fitness if fitness is not None \
             else self.agent.fitness_from_metrics(metrics)
         if fit is not None:
-            self._window.append(np.asarray(fit))
-        lineage = None
-        if (not self.strategy.null and self.pcfg.pbt_interval
-                and self.step_count % self.pcfg.pbt_interval == 0
-                and self._window):
-            lineage = self.evolve()
-        return metrics, lineage
+            self.report_fitness(fit)
+        return metrics, self._maybe_evolve()
 
     def run(self, steps: int, batch_fn, *, on_step=None):
         """Drive ``steps`` update calls.  ``batch_fn(step) -> batch``;
@@ -106,6 +102,72 @@ class PopTrainer:
                 on_step(step, metrics, lineage)
         return metrics
 
+    # ----------------------------------------------------------- env loop
+    def attach_rollout(self, env, **engine_kwargs):
+        """Attach a ``repro.rollout`` acting engine: per-member batched envs
+        (``num_envs``), a population of device-resident replay buffers, a
+        deterministic evaluator, and the fused collect->insert->sample->
+        update iteration (``pcfg.num_steps`` chained updates per call,
+        ``pcfg.backend`` update implementation).  Returns the engine."""
+        from repro.rollout.engine import RolloutEngine
+        if self._mgr is not None and self.pcfg.donate:
+            raise ValueError(
+                "donate=True is unsafe with a checkpoint_dir: save_async "
+                "may still be serializing the population state when the "
+                "next fused iteration donates (and overwrites) its buffers "
+                "— build the PopulationConfig with donate=False")
+        self.key, k = jax.random.split(self.key)
+        self._rollout = RolloutEngine(self.agent, self.pcfg, env, key=k,
+                                      init_state=self.state,
+                                      hypers=self.hypers, **engine_kwargs)
+        return self._rollout
+
+    @property
+    def rollout(self):
+        if self._rollout is None:
+            raise ValueError("no acting engine: call "
+                             "trainer.attach_rollout(env, ...) first")
+        return self._rollout
+
+    def env_iteration(self):
+        """One fused train iteration (collect + insert + sample +
+        ``num_steps`` updates), entirely on device.  Counts as one trainer
+        step for the evolve cadence.  Returns ``(metrics, episode_stats,
+        did_update)``; updates are skipped (did_update False) until every
+        member's buffer can serve a batch."""
+        r = self.rollout
+        self.key, k = jax.random.split(self.key)
+        self.state, metrics, stats, did = r.iterate(self.state, self.hypers, k)
+        self.step_count += 1
+        return metrics, stats, did
+
+    def evaluate_fitness(self):
+        """Per-member fitness from deterministic evaluation episodes
+        (shape (N,)); does not touch the fitness window."""
+        self.key, k = jax.random.split(self.key)
+        return self.rollout.evaluator.evaluate(self.actors, k)
+
+    def run_env_loop(self, iters: int, *, eval_every: int = 1, on_iter=None):
+        """Drive ``iters`` fused iterations.  Every ``eval_every`` iterations
+        the evaluator scores the population into the fitness window, and —
+        exactly like ``step`` — the strategy evolves every
+        ``pcfg.pbt_interval`` trainer steps (here: iterations).  CEM's
+        Algorithm-1 ordering (train -> evaluate -> refit) falls out of
+        ``pbt_interval=1``.  ``on_iter(it, metrics, stats, fitness,
+        lineage)`` is the logging hook.  Returns the last (metrics, stats).
+        """
+        metrics = stats = None
+        for it in range(iters):
+            metrics, stats, _ = self.env_iteration()
+            fitness = None
+            if eval_every and (it + 1) % eval_every == 0:
+                fitness = np.asarray(self.evaluate_fitness())
+                self.report_fitness(fitness)
+            lineage = self._maybe_evolve()
+            if on_iter is not None:
+                on_iter(it, metrics, stats, fitness, lineage)
+        return metrics, stats
+
     # ---------------------------------------------------------------- evolve
     def report_fitness(self, fitness):
         """Feed externally-measured per-member fitness (episode returns)
@@ -118,6 +180,16 @@ class PopTrainer:
         if not self._window:
             return None
         return np.mean(np.stack(self._window), axis=0)
+
+    def _maybe_evolve(self):
+        """Evolve iff on cadence (every ``pcfg.pbt_interval`` trainer steps,
+        non-null strategy, non-empty fitness window); the single predicate
+        shared by ``step`` and ``run_env_loop``."""
+        if (not self.strategy.null and self.pcfg.pbt_interval
+                and self.step_count % self.pcfg.pbt_interval == 0
+                and self._window):
+            return self.evolve()
+        return None
 
     def evolve(self):
         self.last_fitness = self.fitness()

@@ -28,9 +28,11 @@ class DQNState(NamedTuple):
     key: jnp.ndarray
 
 
-def init(key, obs_dim: int, num_actions: int, conv_torso: bool = False) -> DQNState:
+def init(key, obs_dim: int, num_actions: int, conv_torso: bool = False,
+         hidden=nets.HIDDEN) -> DQNState:
     kq, kk = jax.random.split(key)
-    q = nets.q_net_init(kq, obs_dim, num_actions, conv_torso=conv_torso)
+    q = nets.q_net_init(kq, obs_dim, num_actions, hidden=hidden,
+                        conv_torso=conv_torso)
     return DQNState(q=q, target_q=jax.tree.map(jnp.copy, q),
                     opt=_opt_init(q), step=jnp.zeros((), jnp.int32), key=kk)
 

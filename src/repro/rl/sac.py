@@ -34,10 +34,11 @@ class SACState(NamedTuple):
     key: jnp.ndarray
 
 
-def init(key, obs_dim: int, act_dim: int) -> SACState:
+def init(key, obs_dim: int, act_dim: int,
+         hidden=nets.HIDDEN) -> SACState:
     ka, kc, kk = jax.random.split(key, 3)
-    actor = nets.gaussian_actor_init(ka, obs_dim, act_dim)
-    critic = nets.critic_init(kc, obs_dim, act_dim)
+    actor = nets.gaussian_actor_init(ka, obs_dim, act_dim, hidden=hidden)
+    critic = nets.critic_init(kc, obs_dim, act_dim, hidden=hidden)
     log_alpha = jnp.zeros(())
     return SACState(actor=actor, critic=critic,
                     target_critic=jax.tree.map(jnp.copy, critic),

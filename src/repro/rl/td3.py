@@ -40,10 +40,11 @@ class TD3State(NamedTuple):
     key: jnp.ndarray
 
 
-def init(key, obs_dim: int, act_dim: int) -> TD3State:
+def init(key, obs_dim: int, act_dim: int,
+         hidden=nets.HIDDEN) -> TD3State:
     ka, kc, kk = jax.random.split(key, 3)
-    actor = nets.actor_init(ka, obs_dim, act_dim)
-    critic = nets.critic_init(kc, obs_dim, act_dim)
+    actor = nets.actor_init(ka, obs_dim, act_dim, hidden=hidden)
+    critic = nets.critic_init(kc, obs_dim, act_dim, hidden=hidden)
     return TD3State(
         actor=actor, critic=critic,
         target_actor=jax.tree.map(jnp.copy, actor),

@@ -1,0 +1,11 @@
+# On-device acting engine: batched envs, population-vectorized collection,
+# deterministic evaluation, and the fused collect->insert->sample->update
+# train iteration (the acting-side half of the paper, alongside repro.pop).
+from repro.rollout.vecenv import (  # noqa: F401
+    VecEnv, VecEnvState, episode_stats, reset_stats,
+)
+from repro.rollout.collector import (  # noqa: F401
+    Collector, exploration_policy, default_exploration,
+)
+from repro.rollout.evaluator import Evaluator  # noqa: F401
+from repro.rollout.engine import RolloutEngine, transition_spec  # noqa: F401

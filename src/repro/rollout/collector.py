@@ -1,0 +1,108 @@
+"""``Collector`` — the population-vectorized acting step (paper §4.1).
+
+A ``lax.scan`` over ``num_steps`` acting steps, vmapped over the population:
+each member drives its own ``num_envs`` environments with its own
+exploration policy, whose noise scale comes from that member's dynamic
+hyperparameters (the same dict the update step consumes).  Trajectories come
+back flattened to ``(N, num_steps * num_envs, ...)`` so
+``vmap(buffer_add)`` inserts them straight into the population of
+device-resident replay buffers.
+
+The exploration policy contract is
+``policy_fn(actor_params, obs, key, hypers) -> actions`` with per-member
+(unstacked) arguments; ``exploration_policy`` builds one from the functional
+RL modules (td3/sac/dqn), routing ``hypers["explore_noise"]`` /
+``hypers["epsilon"]`` into the module's exploration knob when the member
+tunes it.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.rollout.vecenv import VecEnv
+
+
+def exploration_policy(module):
+    """Exploration policy for a functional RL module, driven by per-member
+    hypers: td3-style modules expose additive-gaussian ``exploration_noise``
+    (hyper ``explore_noise``), dqn-style expose ``epsilon``; anything else
+    (sac's stochastic policy) just consumes the key.
+
+    ``explore_noise`` is deliberately its OWN hyper: td3's ``noise`` is the
+    target-policy-smoothing sigma inside the critic update, and reusing it
+    for acting would let PBT silently disable smoothing while trying to tune
+    exploration.  It is still the fallback for loops that only tune
+    ``noise``, with the module default as the last resort."""
+    defaults = getattr(module, "DEFAULT_HYPERS", {})
+    if "noise" in defaults:
+        def fn(params, obs, key, hypers=None):
+            h = hypers if hypers else {}
+            scale = h.get("explore_noise",
+                          h.get("noise", defaults["noise"]))
+            return module.policy(params, obs, key, exploration_noise=scale)
+    elif "epsilon" in defaults:
+        def fn(params, obs, key, hypers=None):
+            h = hypers if hypers else {}
+            eps = h.get("epsilon", defaults["epsilon"])
+            return module.policy(params, obs, key, epsilon=eps)
+    else:
+        def fn(params, obs, key, hypers=None):
+            return module.policy(params, obs, key)
+    return fn
+
+
+def default_exploration(agent):
+    """Best exploration policy derivable from a ``repro.pop`` agent: its
+    ``exploration_module`` (part of the Agent protocol) when it names one,
+    else the agent's own deterministic-ish ``policy``."""
+    module = getattr(agent, "exploration_module", None)
+    if module is not None:
+        return exploration_policy(module)
+    return lambda params, obs, key, hypers=None: agent.policy(params, obs, key)
+
+
+class Collector:
+    """Drives a population of actors through per-member :class:`VecEnv`s."""
+
+    def __init__(self, venv: VecEnv, policy_fn):
+        self.venv = venv
+        self.policy_fn = policy_fn
+
+    def init(self, key, n: int):
+        """Population-stacked VecEnvState (leaves (N, E, ...))."""
+        return jax.vmap(self.venv.reset)(jax.random.split(key, n))
+
+    def collect(self, actors, vstate, key, num_steps: int, hypers=None):
+        """Act ``num_steps`` batched steps.  Returns ``(vstate, traj)`` with
+        traj leaves ``(N, num_steps * num_envs, ...)`` in insertion order
+        (time-major per env so FIFO eviction drops oldest first).
+
+        A population of 1 runs the member body directly (no outer vmap):
+        same results, but XLA CPU compiles size-1-vmapped scans to
+        pathologically slow code (~4x), and the paper's contract is that
+        size 1 costs exactly one agent."""
+        n = jax.tree.leaves(vstate)[0].shape[0]
+
+        def member(actor, mvstate, mkey, mhypers):
+            def body(carry, _):
+                vs, k = carry
+                k, ka = jax.random.split(k)
+                actions = self.policy_fn(actor, vs.obs, ka, mhypers)
+                vs, trans = self.venv.step(vs, actions)
+                return (vs, k), trans
+
+            (vs, _), traj = jax.lax.scan(body, (mvstate, mkey), None,
+                                         length=num_steps)
+            # (T, E, ...) -> (T*E, ...)
+            traj = jax.tree.map(
+                lambda x: x.reshape((num_steps * self.venv.num_envs,)
+                                    + x.shape[2:]), traj)
+            return vs, traj
+
+        member_keys = jax.random.split(key, n)
+        if n == 1:
+            one = lambda t: jax.tree.map(lambda x: x[0], t)
+            vs, traj = member(one(actors), one(vstate), member_keys[0],
+                              None if hypers is None else one(hypers))
+            return jax.tree.map(lambda x: x[None], (vs, traj))
+        return jax.vmap(member)(actors, vstate, member_keys, hypers)

@@ -1,0 +1,164 @@
+"""The fused, population-vectorized train iteration (paper §4 protocol).
+
+PR 1 compiled the update side; this module compiles the *whole* iteration:
+
+    collect (scan over acting steps, vmapped over members)
+      -> insert into the population of device-resident replay buffers
+      -> sample num_steps batches per member
+      -> num_steps chained update steps
+
+as ONE jitted function with buffer donation, so a training iteration never
+leaves the device — no host round-trips between the phases, which is where
+the unfused loop loses its time (see ``benchmarks/actor_loop.py``).
+
+Updates are gated on ``buffer_can_sample`` with a ``lax.cond``: until every
+member's buffer holds ``batch_size`` transitions the iteration only
+collects, and the update branch is skipped entirely (metrics come back
+zeroed and ``did_update`` False).
+
+Consumers go through ``PopTrainer.attach_rollout(env, ...)`` /
+``trainer.run_env_loop(iters)``; the engine itself owns the mutable
+device-side pieces (buffers + env states) that are NOT part of the
+checkpointed population state.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.vectorize import chain_steps
+from repro.data.replay_buffer import (buffer_add, buffer_can_sample,
+                                      buffer_init, buffer_sample)
+from repro.pop.backend import make_update
+from repro.rollout.collector import Collector, default_exploration
+from repro.rollout.evaluator import Evaluator
+from repro.rollout.vecenv import VecEnv, episode_stats, reset_stats
+
+
+def transition_spec(spec):
+    """One replay-buffer item for an env spec (ShapeDtypeStructs)."""
+    f32 = jnp.float32
+    action = (jax.ShapeDtypeStruct((), jnp.int32) if spec.discrete
+              else jax.ShapeDtypeStruct((spec.act_dim,), f32))
+    return {"obs": jax.ShapeDtypeStruct((spec.obs_dim,), f32),
+            "action": action,
+            "reward": jax.ShapeDtypeStruct((), f32),
+            "next_obs": jax.ShapeDtypeStruct((spec.obs_dim,), f32),
+            "done": jax.ShapeDtypeStruct((), f32)}
+
+
+class RolloutEngine:
+    """Owns VecEnv states + population replay buffers + the fused iteration.
+
+    ``pcfg.num_steps`` is the number of chained update steps per iteration
+    and ``pcfg.backend`` picks the update implementation — the same config
+    knobs that drive ``PopTrainer.step``.
+    """
+
+    def __init__(self, agent, pcfg, env, *, key, init_state, hypers=None,
+                 num_envs: int = 8, collect_steps: int = 32,
+                 batch_size: int = 128, buffer_capacity: int = 100_000,
+                 eval_envs: int = 4, eval_steps: int | None = None,
+                 explore_fn=None):
+        self.agent = agent
+        self.env = env
+        self.n = pcfg.size
+        self.num_steps = max(1, pcfg.num_steps)
+        self.num_envs = num_envs
+        self.collect_steps = collect_steps
+        self.batch_size = batch_size
+
+        explore_fn = explore_fn or default_exploration(agent)
+        self.venv = VecEnv(env, num_envs)
+        self.collector = Collector(self.venv, explore_fn)
+        self.evaluator = Evaluator(env, explore_fn, num_envs=eval_envs,
+                                   num_steps=eval_steps)
+
+        k_env, _ = jax.random.split(key)
+        self.vstate = self.collector.init(k_env, self.n)
+        spec_t = transition_spec(env.spec)
+        self.bufs = jax.vmap(lambda _: buffer_init(buffer_capacity, spec_t))(
+            jnp.arange(self.n))
+
+        if agent.population_level:
+            # population_update consumes (N, B, ...) per call; chain K calls
+            upd1 = make_update(agent, pcfg.backend, num_steps=1, donate=False)
+            self._update_k = (chain_steps(upd1, self.num_steps)
+                              if self.num_steps > 1 else upd1)
+        else:
+            self._update_k = make_update(agent, pcfg.backend,
+                                         num_steps=self.num_steps,
+                                         donate=False)
+
+        # the skip branch of the can-sample gate must return metrics of the
+        # same structure as a real update — resolve shapes abstractly once
+        batch_s = jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct(
+                (self.num_steps, self.n, batch_size) + s.shape, s.dtype),
+            spec_t)
+        if self.num_steps == 1:
+            batch_s = jax.tree.map(
+                lambda s: jax.ShapeDtypeStruct(s.shape[1:], s.dtype), batch_s)
+        abstract = lambda t: jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(jnp.shape(x), x.dtype), t)
+        _, metrics_s = jax.eval_shape(
+            self._update_k, abstract(init_state), batch_s,
+            None if hypers is None else abstract(hypers))
+        self._zero_metrics = jax.tree.map(
+            lambda s: jnp.zeros(s.shape, s.dtype), metrics_s)
+
+        self._iteration = jax.jit(
+            self._build_iteration(),
+            donate_argnums=(0, 1, 2) if pcfg.donate else ())
+
+    # ------------------------------------------------------------ fused jit
+    def _build_iteration(self):
+        K, n, B = self.num_steps, self.n, self.batch_size
+
+        def iteration(state, bufs, vstate, hypers, key):
+            kc, ks = jax.random.split(key)
+            actors = self.agent.actor_params(state)
+            vstate, traj = self.collector.collect(
+                actors, vstate, kc, self.collect_steps, hypers)
+            bufs = jax.vmap(buffer_add)(bufs, traj)
+            can = jnp.all(jax.vmap(
+                lambda b: buffer_can_sample(b, B))(bufs))
+
+            def do_update(state):
+                keys = jax.random.split(ks, K * n)
+                keys = keys.reshape((K, n) + keys.shape[1:])
+                batches = jax.vmap(jax.vmap(
+                    lambda b, kk: buffer_sample(b, kk, B)),
+                    in_axes=(None, 0))(bufs, keys)          # (K, N, B, ...)
+                if K == 1:
+                    batches = jax.tree.map(lambda x: x[0], batches)
+                return self._update_k(state, batches, hypers)
+
+            def skip(state):
+                return state, self._zero_metrics
+
+            state, metrics = jax.lax.cond(can, do_update, skip, state)
+            return state, bufs, vstate, metrics, episode_stats(vstate), can
+
+        return iteration
+
+    # ------------------------------------------------------------- stepping
+    def iterate(self, state, hypers, key):
+        """One fused train iteration; returns the new population state plus
+        ``(metrics, episode_stats, did_update)``."""
+        state, self.bufs, self.vstate, metrics, stats, did = \
+            self._iteration(state, self.bufs, self.vstate, hypers, key)
+        return state, metrics, stats, did
+
+    @property
+    def env_steps_per_iteration(self) -> int:
+        return self.collect_steps * self.num_envs * self.n
+
+    def reset_episode_stats(self):
+        self.vstate = reset_stats(self.vstate)
+
+    def probe_obs(self, key, size: int):
+        """Recent-ish observations from member 0's buffer (DvD behavior
+        probes and similar diagnostics)."""
+        buf0 = jax.tree.map(lambda x: x[0], self.bufs)
+        return buffer_sample(buf0, key, size)["obs"]

@@ -1,0 +1,104 @@
+"""``VecEnv`` — ``num_envs`` copies of a pure-JAX env as one batched step.
+
+One VecEnv holds the environments of ONE population member; the population
+axis is added by ``Collector``/``Evaluator`` with an outer ``vmap``, giving
+the (population × num_envs) leading axes the paper's acting phase runs over.
+
+Episode accounting lives on device inside :class:`VecEnvState` so the host
+never has to unpack trajectories to know how training is going: running
+return/length per env, plus completed-episode aggregates (count, return sum,
+length sum, last completed return) that ``episode_stats`` reduces to means.
+
+Terminal observations follow the contract of ``repro.envs.core``: the
+transition's ``next_obs`` is the pre-reset terminal observation (correct TD
+bootstrapping) while ``state.obs`` — the next policy input — is the
+post-auto-reset observation of the new episode.  Episode accounting counts
+both terminations and time-limit truncations as episode ends, but the
+transition's ``done`` stores termination only, so TD targets bootstrap
+through truncations.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.envs.core import Env
+
+
+class VecEnvState(NamedTuple):
+    env_state: Any                      # pytree, leaves (E, ...)
+    obs: jnp.ndarray                    # (E, obs_dim) next policy input
+    episode_return: jnp.ndarray         # (E,) running return, current episode
+    episode_length: jnp.ndarray         # (E,) int32 running length
+    completed_episodes: jnp.ndarray     # (E,) int32
+    completed_return_sum: jnp.ndarray   # (E,)
+    completed_length_sum: jnp.ndarray   # (E,) int32
+    last_episode_return: jnp.ndarray    # (E,) return of latest finished ep
+
+
+class VecEnv:
+    def __init__(self, env: Env, num_envs: int):
+        self.env = env
+        self.num_envs = num_envs
+        self.spec = env.spec
+
+    def reset(self, key) -> VecEnvState:
+        keys = jax.random.split(key, self.num_envs)
+        env_state, obs = jax.vmap(self.env.reset)(keys)
+        zf = jnp.zeros((self.num_envs,))
+        zi = jnp.zeros((self.num_envs,), jnp.int32)
+        return VecEnvState(env_state=env_state, obs=obs,
+                           episode_return=zf, episode_length=zi,
+                           completed_episodes=zi, completed_return_sum=zf,
+                           completed_length_sum=zi, last_episode_return=zf)
+
+    def step(self, state: VecEnvState, actions):
+        """Batched step.  Returns ``(state, transition)`` where the
+        transition dict is ready for ``buffer_add`` (leaves (E, ...))."""
+        env_state, terminal_obs, reward, done, truncated = jax.vmap(
+            self.env.step)(state.env_state, actions)
+        ep_ret = state.episode_return + reward
+        ep_len = state.episode_length + 1
+        di = done.astype(jnp.int32)
+        new = VecEnvState(
+            env_state=env_state,
+            obs=jax.vmap(self.env.observe)(env_state),
+            episode_return=jnp.where(done, 0.0, ep_ret),
+            episode_length=jnp.where(done, 0, ep_len),
+            completed_episodes=state.completed_episodes + di,
+            completed_return_sum=state.completed_return_sum
+                + jnp.where(done, ep_ret, 0.0),
+            completed_length_sum=state.completed_length_sum
+                + jnp.where(done, ep_len, 0),
+            last_episode_return=jnp.where(done, ep_ret,
+                                          state.last_episode_return))
+        transition = {"obs": state.obs, "action": actions, "reward": reward,
+                      "next_obs": terminal_obs,
+                      "done": (done & ~truncated).astype(jnp.float32)}
+        return new, transition
+
+
+def episode_stats(state: VecEnvState):
+    """Completed-episode means, reduced over the env axis (works for both a
+    single member, leaves (E,), and a stacked population, leaves (N, E) —
+    the reduction is always over the trailing axis)."""
+    count = state.completed_episodes.sum(-1)
+    denom = jnp.maximum(count, 1).astype(jnp.float32)
+    return {
+        "episodes": count,
+        "mean_return": state.completed_return_sum.sum(-1) / denom,
+        "mean_length": state.completed_length_sum.sum(-1) / denom,
+        "last_return": state.last_episode_return.mean(-1),
+    }
+
+
+def reset_stats(state: VecEnvState) -> VecEnvState:
+    """Zero the completed-episode aggregates (fresh logging window) without
+    disturbing the environments themselves."""
+    zi = jnp.zeros_like(state.completed_episodes)
+    return state._replace(completed_episodes=zi,
+                          completed_return_sum=jnp.zeros_like(
+                              state.completed_return_sum),
+                          completed_length_sum=zi)

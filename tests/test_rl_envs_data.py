@@ -20,7 +20,7 @@ def test_envs_step_shapes_and_reset():
             action = jnp.zeros((), jnp.int32)
         else:
             action = jnp.zeros((env.spec.act_dim,))
-        state, obs, reward, done = env.step(state, action)
+        state, obs, reward, done, truncated = env.step(state, action)
         assert obs.shape == (env.spec.obs_dim,)
         assert jnp.isfinite(reward)
 
@@ -30,7 +30,7 @@ def test_env_vmappable_over_population():
     keys = jax.random.split(KEY, 8)
     states, obs = jax.vmap(env.reset)(keys)
     actions = jnp.zeros((8, 1))
-    states, obs, rew, done = jax.vmap(env.step)(states, actions)
+    states, obs, rew, done, truncated = jax.vmap(env.step)(states, actions)
     assert obs.shape == (8, 3) and rew.shape == (8,)
 
 
@@ -39,7 +39,7 @@ def test_episode_auto_resets():
     state, obs = env.reset(KEY)
     step = jax.jit(env.step)
     for _ in range(105):  # episode length 100
-        state, obs, r, done = step(state, jnp.ones((2,)))
+        state, obs, r, done, truncated = step(state, jnp.ones((2,)))
     assert int(state["t"]) <= 100
 
 

@@ -1,0 +1,292 @@
+"""repro.rollout acceptance: collector equivalence vs a python-loop reference,
+on-device episode stats vs offline returns, evaluator determinism, the
+terminal-observation contract (no cross-episode bootstrapping), empty-buffer
+gating of the fused iteration, and the two new env scenarios."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import PopulationConfig
+from repro.data import buffer_init, buffer_sample
+from repro.envs import make, rollout
+from repro.pop import ModuleAgent, PopTrainer
+from repro.rl import dqn, td3
+from repro.rollout import (Collector, Evaluator, VecEnv, episode_stats,
+                           exploration_policy)
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _stacked_actors(env, n, key=KEY):
+    return jax.vmap(lambda k: td3.init(
+        k, env.spec.obs_dim, env.spec.act_dim).actor)(jax.random.split(key, n))
+
+
+# --------------------------------------------------------------- collector
+def test_collector_matches_python_loop():
+    """The scan'd+vmapped collector reproduces a per-member python loop with
+    the same key: booleans and key-chaining exactly, floats to ~1 ulp (XLA
+    fuses the MLP policy differently under the member vmap, so bitwise
+    equality across the two execution paths is not guaranteed)."""
+    env = make("pendulum")
+    venv = VecEnv(env, 3)
+    n, T = 2, 7
+    actors = _stacked_actors(env, n)
+    policy = exploration_policy(td3)
+    col = Collector(venv, policy)
+    k_init, k_col = jax.random.split(jax.random.PRNGKey(1))
+    vstate = col.init(k_init, n)
+    _, traj = col.collect(actors, vstate, k_col, T)
+
+    member_keys = jax.random.split(k_col, n)
+    for i in range(n):
+        actor_i = jax.tree.map(lambda x: x[i], actors)
+        vs = jax.tree.map(lambda x: x[i], vstate)
+        k = member_keys[i]
+        for t in range(T):
+            k, ka = jax.random.split(k)
+            a = policy(actor_i, vs.obs, ka, None)
+            vs, trans = venv.step(vs, a)
+            for name, ref in trans.items():
+                ref = np.asarray(ref)
+                got = np.asarray(traj[name][i]).reshape(
+                    (T, venv.num_envs) + ref.shape[1:])[t]
+                if ref.dtype.kind == "f":
+                    np.testing.assert_allclose(
+                        got, ref, rtol=1e-6, atol=1e-6,
+                        err_msg=f"{name} member {i} step {t}")
+                else:
+                    np.testing.assert_array_equal(
+                        got, ref, err_msg=f"{name} member {i} step {t}")
+
+
+def test_collector_uses_member_hyper_noise():
+    env = make("pendulum")
+    venv = VecEnv(env, 2)
+    n = 2
+    # identical actors + identical env keys: trajectories can only differ
+    # through the per-member exploration-noise hyperparameter
+    one = td3.init(KEY, env.spec.obs_dim, env.spec.act_dim).actor
+    actors = jax.tree.map(lambda x: jnp.stack([x, x]), one)
+    col = Collector(venv, exploration_policy(td3))
+    vs0 = jax.tree.map(lambda x: jnp.stack([x, x]),
+                       venv.reset(jax.random.PRNGKey(7)))
+    hypers = {"explore_noise": jnp.asarray([0.0, 1.0])}
+    k = jax.random.PRNGKey(8)
+    keys = jax.random.split(k, n)
+    same_keys = jnp.stack([keys[0], keys[0]])
+
+    def collect_with(ks):
+        def member(actor, mvs, mk, mh):
+            def body(carry, _):
+                vs, kk = carry
+                kk, ka = jax.random.split(kk)
+                a = col.policy_fn(actor, vs.obs, ka, mh)
+                vs, trans = venv.step(vs, a)
+                return (vs, kk), trans
+            (_, _), tr = jax.lax.scan(body, (mvs, mk), None, length=4)
+            return tr
+        return jax.vmap(member)(actors, vs0, ks, hypers)
+
+    traj = collect_with(same_keys)
+    a0, a1 = np.asarray(traj["action"][0]), np.asarray(traj["action"][1])
+    assert not np.array_equal(a0, a1)  # noise=1.0 member explores
+    # and the zero-noise member acts exactly deterministically
+    det = td3.policy(one, np.asarray(traj["obs"][0][0]), None)
+    np.testing.assert_allclose(np.asarray(a0[0]), np.asarray(det),
+                               rtol=1e-6, atol=1e-6)
+
+
+# ----------------------------------------------------------- episode stats
+def test_episode_stats_match_offline_returns():
+    env = make("cartpole")
+    E, T = 4, 80
+    venv = VecEnv(env, E)
+    vs = venv.reset(KEY)
+    k = jax.random.PRNGKey(2)
+    rewards, dones = [], []
+    for _ in range(T):
+        k, ka = jax.random.split(k)
+        actions = jax.random.randint(ka, (E,), 0, 2)
+        vs, trans = venv.step(vs, actions)
+        rewards.append(np.asarray(trans["reward"]))
+        dones.append(np.asarray(trans["done"]))
+    rewards, dones = np.stack(rewards), np.stack(dones)
+
+    total_eps, total_ret, total_len = 0, 0.0, 0
+    for e in range(E):
+        ret, length = 0.0, 0
+        for t in range(T):
+            ret += rewards[t, e]
+            length += 1
+            if dones[t, e]:
+                total_eps += 1
+                total_ret += ret
+                total_len += length
+                ret, length = 0.0, 0
+    assert total_eps > 0  # random cartpole fails well within 80 steps
+    stats = episode_stats(vs)
+    assert int(stats["episodes"]) == total_eps
+    np.testing.assert_allclose(float(stats["mean_return"]),
+                               total_ret / total_eps, rtol=1e-5)
+    np.testing.assert_allclose(float(stats["mean_length"]),
+                               total_len / total_eps, rtol=1e-5)
+
+
+# -------------------------------------------------------------- evaluator
+def test_evaluator_fitness_deterministic_across_jit_vmap():
+    env = make("pendulum")
+    n = 3
+    actors = _stacked_actors(env, n, jax.random.PRNGKey(4))
+    ev = Evaluator(env, exploration_policy(td3), num_envs=2, num_steps=40)
+    f1 = ev.evaluate(actors, KEY)
+    f2 = ev.evaluate(actors, KEY)
+    assert f1.shape == (n,)
+    np.testing.assert_array_equal(np.asarray(f1), np.asarray(f2))
+    # eager per-member reference (no jit, no member vmap)
+    keys = jax.random.split(KEY, n)
+    for i in range(n):
+        ref = ev._member_eval(jax.tree.map(lambda x: x[i], actors), keys[i])
+        np.testing.assert_allclose(float(f1[i]), float(ref),
+                                   rtol=1e-5, atol=1e-5)
+
+
+# ----------------------------------------- terminal observation regression
+def test_vecenv_terminal_obs_not_reset_obs():
+    env = make("cartpole")
+    venv = VecEnv(env, 1)
+    vs = venv.reset(KEY)
+    transitions = []
+    for _ in range(80):  # constant push -> pole falls fast
+        vs, trans = venv.step(vs, jnp.ones((1,), jnp.int32))
+        transitions.append(jax.tree.map(lambda x: np.asarray(x)[0], trans))
+    dones = [float(tr["done"]) for tr in transitions]
+    assert 1.0 in dones
+    i = dones.index(1.0)
+    term = transitions[i]["next_obs"]
+    # stored next_obs is the PRE-reset terminal state (out of bounds), not
+    # the freshly-reset obs (uniform in [-0.05, 0.05])
+    assert abs(term[0]) > 2.4 or abs(term[2]) > 0.2095
+    # the next transition starts the new episode from a reset obs
+    assert np.all(np.abs(transitions[i + 1]["obs"]) <= 0.05 + 1e-7)
+    # within an episode, next_obs chains exactly into the next obs
+    for t in range(i):
+        np.testing.assert_array_equal(transitions[t]["next_obs"],
+                                      transitions[t + 1]["obs"])
+
+
+def test_core_rollout_no_cross_episode_bootstrapping():
+    env = make("cartpole")
+    policy = lambda p, o, k: jnp.ones((), jnp.int32)
+    traj = jax.jit(lambda k: rollout(env, policy, None, k, 80))(KEY)
+    done = np.asarray(traj["done"])
+    obs = np.asarray(traj["obs"])
+    nxt = np.asarray(traj["next_obs"])
+    idx = np.nonzero(done)[0]
+    assert idx.size > 0
+    for t in idx:
+        if t + 1 < done.shape[0]:
+            # new episode starts from a reset observation, so no transition
+            # links episode k's terminal state to episode k+1
+            assert np.all(np.abs(obs[t + 1]) <= 0.05 + 1e-7)
+    for t in range(done.shape[0] - 1):
+        if not done[t]:
+            np.testing.assert_array_equal(nxt[t], obs[t + 1])
+
+
+# ------------------------------------------------------ empty-buffer guard
+def test_buffer_sample_empty_raises_eagerly():
+    buf = buffer_init(16, {"x": jnp.zeros((2,))})
+    with pytest.raises(ValueError, match="empty buffer"):
+        buffer_sample(buf, KEY, 4)
+
+
+def test_fused_loop_gates_updates_on_can_sample():
+    env = make("pendulum")
+    pcfg = PopulationConfig(size=2, strategy="none", num_steps=2,
+                            donate=False)
+    tr = PopTrainer(ModuleAgent(td3, env.spec.obs_dim, env.spec.act_dim),
+                    pcfg, seed=0)
+    tr.attach_rollout(env, num_envs=2, collect_steps=4, batch_size=64,
+                      buffer_capacity=256, eval_envs=1, eval_steps=10)
+    before = jax.tree.map(np.asarray, tr.actors)
+    metrics, _, did = tr.env_iteration()  # 8 transitions < batch_size 64
+    assert not bool(did)
+    assert all(np.all(np.asarray(v) == 0) for v in metrics.values())
+    jax.tree.map(np.testing.assert_array_equal, before,
+                 jax.tree.map(np.asarray, tr.actors))
+    did_any = False
+    for _ in range(8):  # 8 more iterations x 8 transitions -> 72 total
+        metrics, _, did = tr.env_iteration()
+        did_any = did_any or bool(did)
+    assert did_any
+    changed = jax.tree.leaves(jax.tree.map(
+        lambda a, b: np.any(a != np.asarray(b)), before, tr.actors))
+    assert any(changed)
+
+
+# ----------------------------------------------------------- new scenarios
+def test_new_envs_step_shapes_and_vmap():
+    for name in ("mountain_car", "acrobot"):
+        env = make(name)
+        state, obs = env.reset(KEY)
+        assert obs.shape == (env.spec.obs_dim,)
+        action = (jnp.zeros((), jnp.int32) if env.spec.discrete
+                  else jnp.zeros((env.spec.act_dim,)))
+        state, obs, reward, done, trunc = env.step(state, action)
+        assert obs.shape == (env.spec.obs_dim,)
+        assert np.isfinite(float(reward))
+        keys = jax.random.split(KEY, 4)
+        states, obs = jax.vmap(env.reset)(keys)
+        actions = (jnp.zeros((4,), jnp.int32) if env.spec.discrete
+                   else jnp.zeros((4, env.spec.act_dim)))
+        states, obs, rew, done, trunc = jax.vmap(env.step)(states, actions)
+        assert obs.shape == (4, env.spec.obs_dim) and rew.shape == (4,)
+
+
+def test_mountain_car_goal_terminates_with_bonus():
+    env = make("mountain_car")
+    state, _ = env.reset(KEY)
+    state = dict(state, pos=jnp.asarray(0.449), vel=jnp.asarray(0.07))
+    _, _, reward, done, truncated = env.step(state, jnp.ones((1,)))
+    assert bool(done) and not bool(truncated) and float(reward) > 90
+
+
+def test_time_limit_is_truncation_not_termination():
+    """Pendulum episodes end at t=200 by TRUNCATION: the episode resets but
+    the stored transition must keep done=0 so TD targets bootstrap through
+    the time limit (a time-out is not a terminal state)."""
+    env = make("pendulum")
+    venv = VecEnv(env, 1)
+    vs = venv.reset(KEY)
+    dones = []
+    for _ in range(201):
+        vs, trans = venv.step(vs, jnp.zeros((1, 1)))
+        dones.append(float(np.asarray(trans["done"])[0]))
+    assert all(d == 0.0 for d in dones)        # never a bootstrap cut ...
+    assert int(vs.completed_episodes[0]) == 1  # ... yet the episode ended
+    # and the env-level step reports the split explicitly at step 200
+    state, _ = env.reset(KEY)
+    done = truncated = None
+    for _ in range(199):
+        state, _, _, done, truncated = env.step(state, jnp.zeros((1,)))
+    assert not bool(done)
+    state, _, _, done, truncated = env.step(state, jnp.zeros((1,)))
+    assert bool(done) and bool(truncated)
+
+
+def test_acrobot_dqn_fused_path():
+    env = make("acrobot")
+    pcfg = PopulationConfig(size=2, strategy="none", num_steps=2,
+                            donate=False)
+    tr = PopTrainer(ModuleAgent(dqn, env.spec.obs_dim, env.spec.act_dim),
+                    pcfg, seed=3)
+    tr.attach_rollout(env, num_envs=2, collect_steps=8, batch_size=8,
+                      buffer_capacity=256, eval_envs=1, eval_steps=20)
+    metrics, stats, did = tr.env_iteration()
+    assert bool(did)
+    assert np.isfinite(np.asarray(metrics["loss"])).all()
+    fitness = tr.evaluate_fitness()
+    assert fitness.shape == (2,)
+    assert np.isfinite(np.asarray(fitness)).all()
