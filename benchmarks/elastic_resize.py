@@ -1,0 +1,118 @@
+"""Elastic re-layout benchmark: the cost of a save -> resize -> resume cycle.
+
+The elasticity story only matters if a re-layout is cheap relative to the
+training it rescues, so this harness times the three phases of
+``repro.elastic`` end to end for a ``PopTrainer`` WITH an attached rollout
+engine (the realistic case — replay buffers dominate checkpoint bytes):
+
+  save      — blocking checkpoint (device -> host -> atomic dir rename)
+  restore   — build the resized trainer's first ``restore_elastic`` call:
+              load + fitness-ranked member gather + device placement
+  first_it  — the first fused iteration after resume (recompilation on the
+              new topology, the real "time to training again" tail)
+
+Rows are (population -> resized population) cells at the current device
+count (run under ``XLA_FLAGS=--xla_force_host_platform_device_count=8``
+for the multi-device variant — CI's tier-2 elastic job does).  ``--json
+PATH`` dumps rows for trend tracking next to ``actor_loop`` /
+``population_update``.
+"""
+import argparse
+import json
+import shutil
+import tempfile
+import time
+
+import jax
+
+from benchmarks.common import emit
+from repro.configs.base import HyperSpace, PopulationConfig
+from repro.elastic import restore_elastic
+from repro.envs import make
+from repro.pop import ModuleAgent, PopTrainer
+from repro.rl import td3
+
+SPACE = HyperSpace(log_uniform=(("actor_lr", 3e-5, 3e-3),))
+
+
+def _trainer(n, ckpt_dir, *, backend, buffer_capacity):
+    env = make("pendulum")
+    pcfg = PopulationConfig(size=n, strategy="pbt", backend=backend,
+                            num_steps=2, pbt_interval=0, hyper_space=SPACE,
+                            donate=False)
+    tr = PopTrainer(ModuleAgent(td3, env.spec.obs_dim, env.spec.act_dim),
+                    pcfg, seed=0, checkpoint_dir=ckpt_dir)
+    tr.attach_rollout(env, num_envs=2, collect_steps=16, batch_size=32,
+                      buffer_capacity=buffer_capacity, eval_envs=1)
+    return tr
+
+
+def _cycle(n, new_n, backend, buffer_capacity, warm_iters):
+    ckpt = tempfile.mkdtemp(prefix="elastic_bench_")
+    try:
+        tr = _trainer(n, ckpt, backend=backend,
+                      buffer_capacity=buffer_capacity)
+        for _ in range(warm_iters):
+            tr.env_iteration()
+        tr.report_fitness(jax.numpy.arange(n, dtype=jax.numpy.float32))
+
+        t0 = time.perf_counter()
+        tr.save(blocking=True)
+        t_save = time.perf_counter() - t0
+
+        tr2 = _trainer(new_n, ckpt, backend=backend,
+                       buffer_capacity=buffer_capacity)
+        t0 = time.perf_counter()
+        restore_elastic(tr2)
+        jax.block_until_ready(tr2.state)
+        t_restore = time.perf_counter() - t0
+
+        t0 = time.perf_counter()
+        _, _, did = tr2.env_iteration()
+        jax.block_until_ready(tr2.state)
+        t_first = time.perf_counter() - t0
+        assert bool(did), "resumed trainer should keep updating"
+        return t_save, t_restore, t_first
+    finally:
+        shutil.rmtree(ckpt, ignore_errors=True)
+
+
+def run(pop_sizes=(2, 4, 8), backend="vectorized",
+        buffer_capacity=20_000, warm_iters=3, json_path=None):
+    cols = ["bench", "backend", "devices", "pop", "new_pop", "save_ms",
+            "restore_ms", "first_iter_ms", "cycle_ms"]
+    emit(cols)
+    rows = []
+    devices = len(jax.devices())
+    for n in pop_sizes:
+        for new_n in {max(1, n // 2), n, n * 2}:
+            ts, tr_, tf = _cycle(n, new_n, backend, buffer_capacity,
+                                 warm_iters)
+            row = {"bench": "elastic_resize", "backend": backend,
+                   "devices": devices, "pop": n, "new_pop": new_n,
+                   "save_ms": round(1e3 * ts, 1),
+                   "restore_ms": round(1e3 * tr_, 1),
+                   "first_iter_ms": round(1e3 * tf, 1),
+                   "cycle_ms": round(1e3 * (ts + tr_ + tf), 1)}
+            rows.append(row)
+            emit([row[c] for c in cols])
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(rows, f, indent=2)
+        print(f"wrote {json_path}")
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="smaller pops / buffers (CI mode)")
+    ap.add_argument("--backend", default="vectorized",
+                    choices=["vectorized", "sequential", "islands"])
+    ap.add_argument("--json", default=None, help="also dump rows as JSON")
+    args = ap.parse_args()
+    if args.fast:
+        run(pop_sizes=(2, 4), backend=args.backend, buffer_capacity=2_000,
+            warm_iters=2, json_path=args.json)
+    else:
+        run(backend=args.backend, json_path=args.json)

@@ -9,6 +9,10 @@ the paper's published qualitative result quoted in EXPERIMENTS.md):
   jax_sequential_50  — same, 50 steps chained per call (paper's async trick)
   jax_vectorized_1   — backend="vectorized": jit(vmap(step)), the protocol
   jax_vectorized_50  — jit(vmap(50 chained steps))
+  jax_islands_1/50   — backend="islands": member groups shard_mapped over
+                       the "pop" axis of an IslandLayout (one island on a
+                       single device; run under the 8-fake-device flag for
+                       the multi-accelerator shape)
 Reported: ms per *member-update-step* and speedup vs jax_sequential_1.
 """
 import jax
@@ -35,7 +39,7 @@ def run(pop_sizes=(1, 2, 4, 8, 16), num_steps_chained=10, agents=("td3", "sac"),
                 lambda x: jnp.broadcast_to(x, (num_steps_chained,) + x.shape),
                 b1)
             arms = {}
-            for backend in ("sequential", "vectorized"):
+            for backend in ("sequential", "vectorized", "islands"):
                 arms[f"jax_{backend}_1"] = (
                     make_update(agent, backend, num_steps=1, donate=False),
                     b1, 1)

@@ -83,6 +83,7 @@ if __name__ == "__main__":
     ap.add_argument("--population", type=int, default=8)
     ap.add_argument("--iters", type=int, default=30)
     ap.add_argument("--backend", default="vectorized",
-                    choices=["vectorized", "sequential", "sharded"])
+                    choices=["vectorized", "sequential", "sharded",
+                             "islands"])
     args = ap.parse_args()
     run(population=args.population, iters=args.iters, backend=args.backend)

@@ -1,1 +1,3 @@
-from repro.checkpoint.manager import CheckpointManager, save_pytree, load_pytree  # noqa: F401
+from repro.checkpoint.manager import (  # noqa: F401
+    CheckpointManager, load_aux, load_pytree, save_pytree,
+)

@@ -32,31 +32,69 @@ def _flatten(tree):
     return leaves, treedef
 
 
-def save_pytree(path: str | Path, tree: Any, extra: dict | None = None):
-    """Atomic save: write to <path>.tmp then os.replace."""
+def _dump_tree(directory: Path, name: str, tree: Any):
+    leaves, treedef = _flatten(tree)
+    arrs = {f"leaf_{i}": np.asarray(jax.device_get(l))
+            for i, l in enumerate(leaves)}
+    np.savez(directory / f"{name}.npz", **arrs)
+    return len(leaves), treedef
+
+
+def save_pytree(path: str | Path, tree: Any, extra: dict | None = None,
+                aux: dict[str, Any] | None = None):
+    """Atomic save: write to <path>.tmp then os.replace.
+
+    ``aux`` is a dict of independently-restorable side trees (e.g. a
+    rollout engine's replay buffers) saved alongside the main tree in the
+    same atomic rename: a reader either sees the whole checkpoint or none
+    of it.  Aux trees restore via :func:`load_aux` with their own template,
+    so a consumer that lacks the producer's side state (a trainer without
+    an attached rollout) can still restore the main tree.
+    """
     path = Path(path)
     tmp = path.with_name(path.name + ".tmp")
     if tmp.exists():
         shutil.rmtree(tmp)
     tmp.mkdir(parents=True)
-    leaves, treedef = _flatten(tree)
-    arrs = {f"leaf_{i}": np.asarray(jax.device_get(l)) for i, l in enumerate(leaves)}
-    np.savez(tmp / "arrays.npz", **arrs)
-    meta = {"num_leaves": len(leaves), "extra": extra or {},
-            "treedef": str(treedef)}
+    num, treedef = _dump_tree(tmp, "arrays", tree)
+    aux_meta = {name: _dump_tree(tmp, f"aux_{name}", t)[0]
+                for name, t in (aux or {}).items()}
+    meta = {"num_leaves": num, "extra": extra or {},
+            "treedef": str(treedef), "aux": aux_meta}
     (tmp / "meta.json").write_text(json.dumps(meta))
     if path.exists():
         shutil.rmtree(path)
     os.replace(tmp, path)
 
 
-def load_pytree(path: str | Path, template: Any):
-    """Restore into the structure of ``template`` (shape/dtype preserved)."""
-    path = Path(path)
-    with np.load(path / "arrays.npz") as data:
+def _load_tree(file: Path, template: Any):
+    with np.load(file) as data:
         leaves = [data[f"leaf_{i}"] for i in range(len(data.files))]
     _, treedef = _flatten(template)
+    if treedef.num_leaves != len(leaves):
+        raise ValueError(
+            f"{file} holds {len(leaves)} leaves but the restore template "
+            f"has {treedef.num_leaves}: the checkpoint was written with a "
+            f"different structure (an older format, or a different "
+            f"strategy/hyper space) — restore with a matching template or "
+            f"start fresh")
     return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def load_pytree(path: str | Path, template: Any):
+    """Restore into the structure of ``template`` (dtypes preserved; shapes
+    come from the saved arrays, which is what makes elastic re-layout
+    possible — a template of a different population size still restores)."""
+    return _load_tree(Path(path) / "arrays.npz", template)
+
+
+def load_aux(path: str | Path, name: str, template: Any):
+    """Restore the named aux tree, or None when this checkpoint has none
+    (e.g. it was written before the producer gained that side state)."""
+    file = Path(path) / f"aux_{name}.npz"
+    if not file.exists():
+        return None
+    return _load_tree(file, template)
 
 
 def load_extra(path: str | Path) -> dict:
@@ -88,18 +126,22 @@ class CheckpointManager:
         steps = self.all_steps()
         return steps[-1] if steps else None
 
-    def save(self, step: int, tree: Any, extra: dict | None = None):
+    def save(self, step: int, tree: Any, extra: dict | None = None,
+             aux: dict[str, Any] | None = None):
         save_pytree(self._ckpt_path(step), tree,
-                    dict(extra or {}, step=step))
+                    dict(extra or {}, step=step), aux=aux)
         self._gc()
 
-    def save_async(self, step: int, tree: Any, extra: dict | None = None):
+    def save_async(self, step: int, tree: Any, extra: dict | None = None,
+                   aux: dict[str, Any] | None = None):
         """Non-blocking save; device->host copy happens here (cheap), IO on
         the background thread."""
         self.wait()
         host_tree = jax.device_get(tree)
+        host_aux = None if aux is None else jax.device_get(aux)
         self._thread = threading.Thread(
-            target=self.save, args=(step, host_tree, extra), daemon=True)
+            target=self.save, args=(step, host_tree, extra, host_aux),
+            daemon=True)
         self._thread.start()
 
     def wait(self):
@@ -113,6 +155,24 @@ class CheckpointManager:
             return None, None
         path = self._ckpt_path(step)
         return load_pytree(path, template), load_extra(path)
+
+    def restore_aux(self, name: str, template: Any,
+                    step: int | None = None):
+        """Restore a named aux tree (see ``save_pytree``), or None when the
+        checkpoint predates it / the producer had none."""
+        step = self.latest() if step is None else step
+        if step is None:
+            return None
+        return load_aux(self._ckpt_path(step), name, template)
+
+    def peek_extra(self, step: int | None = None) -> dict | None:
+        """The JSON extras of a checkpoint WITHOUT loading any arrays —
+        cheap enough for a launcher deciding how to re-layout before it
+        builds anything (``repro.elastic`` reads size/fitness here)."""
+        step = self.latest() if step is None else step
+        if step is None:
+            return None
+        return load_extra(self._ckpt_path(step))
 
     def _gc(self):
         steps = self.all_steps()

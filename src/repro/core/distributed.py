@@ -1,11 +1,14 @@
-"""Distribution of the population over the device mesh.
+"""GSPMD distribution of the population over the device mesh.
 
-The paper scales out by running islands of vectorized members per
-accelerator (§5.1: 80 agents = 4 T4s x 20 vectorized members).  The
-TPU-native generalization: the population axis of every stacked pytree is
-sharded over mesh axes, and the PBT exploit step — a gather by parent
-index — lowers to XLA collectives automatically under jit, so cross-pod
-member exchange costs one collective per PBT interval.
+This is the IMPLICIT multi-device path (``backend="sharded"``): the
+population axis of every stacked pytree is sharded over mesh axes via
+``NamedSharding`` and XLA's partitioner decides the rest; the PBT exploit
+step — a gather by parent index — lowers to XLA collectives automatically
+under jit, so cross-pod member exchange costs one collective per PBT
+interval.  The EXPLICIT path — the paper's §5.1 islands topology
+(80 agents = 4 T4s x 20 vectorized members) as a literal shard_map over
+member groups — is ``repro.elastic`` and ``backend="islands"``; see
+docs/scaling.md for when to pick which.
 
 ``population_sharding`` builds NamedShardings that put the population axis
 on the requested mesh axes and replicate everything else (each member's

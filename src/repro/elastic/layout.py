@@ -1,0 +1,178 @@
+"""Device-topology planning: islands over the population axis.
+
+The paper's §5.1 scaling recipe is *islands of vectorized members per
+accelerator* (80 agents = 4 T4s x 20 vectorized members): the population
+axis is split over an ``"pop"`` mesh axis (one group of members per
+island), and whatever devices remain form the ``"data"`` / ``"model"``
+axes *inside* each island for members too large to fit one accelerator.
+:class:`IslandLayout` is that decomposition as a value — pure math until
+``.mesh`` touches jax — and :func:`plan_layout` chooses it from nothing
+but the device count and the population size:
+
+    >>> plan_layout(num_devices=4, population=20)       # the paper's setup
+    IslandLayout(devices=4, islands=4, data=1, model=1, population=20)
+
+``plan_mesh`` is the older ingredient (largest usable (data, model) grid
+for a surviving device count) kept for model-parallel re-layout of a
+single large member; ``repro.elastic.relayout`` composes either with the
+rule-derived shardings.
+"""
+from __future__ import annotations
+
+import math
+import warnings
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro import compat
+
+
+def _fit_model_axis(num_devices: int, preferred_model: int) -> int:
+    """Largest width <= preferred that divides the device count, halving on
+    the way down (model-parallel groups must be whole)."""
+    model = max(1, preferred_model)
+    while model > 1 and (num_devices % model or num_devices // model < 1):
+        model //= 2
+    return model
+
+
+def plan_grid(num_devices: int, *, preferred_model: int = 16,
+              multi_pod: bool = False):
+    """The (shape, axis_names) grid ``plan_mesh`` would build — pure math,
+    no jax device access, so launchers (and tests) can plan for device
+    counts this host doesn't have.
+
+    When ``preferred_model`` does not divide ``num_devices`` the width is
+    halved until it does; if nothing fits, the grid degenerates to
+    ``(num_devices, 1)`` — pure data parallelism, each member's model
+    unsharded.  Both fallbacks warn, because a silently-shrunk model axis
+    changes the memory-per-device budget the caller sized for.
+    """
+    model = _fit_model_axis(num_devices, preferred_model)
+    if model != preferred_model:
+        warnings.warn(
+            f"plan_mesh: preferred_model={preferred_model} does not divide "
+            f"num_devices={num_devices}; falling back to model={model}"
+            + (" (pure data parallelism — model axis gone)"
+               if model == 1 else ""),
+            stacklevel=2)
+    data = num_devices // model
+    axes = ("data", "model")
+    shape = (data, model)
+    if multi_pod and data % 2 == 0:
+        shape, axes = (2, data // 2, model), ("pod", "data", "model")
+    return shape, axes
+
+
+def plan_mesh(num_devices: int, *, preferred_model: int = 16,
+              multi_pod: bool = False):
+    """Largest usable (data, model) mesh for the surviving devices (see
+    :func:`plan_grid` for the policy and the fallback warnings)."""
+    shape, axes = plan_grid(num_devices, preferred_model=preferred_model,
+                            multi_pod=multi_pod)
+    return compat.make_mesh(shape, axes)
+
+
+@dataclass(frozen=True)
+class IslandLayout:
+    """A partition of ``devices`` accelerators into ``islands`` member
+    groups, each island an internal (data, model) grid.
+
+    Pure math (hashable, printable, comparable — usable in configs and
+    test parametrization); ``.mesh`` materializes the jax mesh with axes
+    ``("pop", "data", "model")``, built lazily and cached so repeated
+    access returns the *same* Mesh object (jit caches key on it).
+    """
+    devices: int
+    islands: int
+    data: int
+    model: int
+    population: int
+
+    def __post_init__(self):
+        if self.islands * self.data * self.model != self.devices:
+            raise ValueError(f"{self} does not tile its devices")
+        if self.population % self.islands:
+            raise ValueError(
+                f"population={self.population} does not split into "
+                f"{self.islands} whole islands")
+
+    @property
+    def members_per_island(self) -> int:
+        return self.population // self.islands
+
+    @property
+    def mesh(self):
+        cached = _MESH_CACHE.get(self)
+        if cached is None:
+            cached = _MESH_CACHE[self] = _build_mesh(self)
+        return cached
+
+    def place(self, tree):
+        """Place a population pytree onto the layout: leaves with a leading
+        population axis are split over the ``"pop"`` mesh axis (one member
+        group per island); everything else is replicated."""
+        import jax
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        mesh = self.mesh
+        n = self.population
+
+        def sharding(leaf):
+            leaf = np.asarray(leaf) if not hasattr(leaf, "ndim") else leaf
+            if leaf.ndim >= 1 and leaf.shape[0] == n:
+                return NamedSharding(mesh, P("pop"))
+            return NamedSharding(mesh, P())
+        return jax.device_put(tree, jax.tree.map(sharding, tree))
+
+
+_MESH_CACHE: dict = {}
+
+
+def _build_mesh(layout: IslandLayout):
+    import jax
+    from jax.sharding import Mesh
+    available = len(jax.devices())
+    if layout.devices > available:
+        raise ValueError(
+            f"{layout} needs {layout.devices} devices but this process has "
+            f"{available}; plan the layout for the devices that exist "
+            f"(plan_layout({available}, {layout.population}), or lower "
+            f"--devices)")
+    shape = (layout.islands, layout.data, layout.model)
+    axes = ("pop", "data", "model")
+    if layout.devices == available:
+        return compat.make_mesh(shape, axes)
+    # a layout over a device subset (--devices, or planning for survivors):
+    # build the mesh explicitly from the first `devices` devices
+    devs = np.asarray(jax.devices()[:layout.devices]).reshape(shape)
+    return Mesh(devs, axes)
+
+
+def plan_layout(num_devices: int, population: int, *,
+                preferred_model: int = 1) -> IslandLayout:
+    """Choose the island decomposition for ``num_devices`` accelerators and
+    a population of ``population`` members.
+
+    Policy (the paper's §5.1 regime): give the population axis as many
+    islands as divide BOTH the population and the post-model device count
+    (members stay whole and islands stay balanced), then spend the
+    remainder on the data axis inside each island.  ``preferred_model > 1``
+    reserves a model-parallel grid per member first (large-member
+    populations), falling back with a warning exactly like ``plan_mesh``.
+    """
+    if num_devices < 1:
+        raise ValueError(f"num_devices must be >= 1, got {num_devices}")
+    if population < 1:
+        raise ValueError(f"population must be >= 1, got {population}")
+    model = _fit_model_axis(num_devices, preferred_model)
+    if model != preferred_model:
+        warnings.warn(
+            f"plan_layout: preferred_model={preferred_model} does not "
+            f"divide num_devices={num_devices}; falling back to "
+            f"model={model}", stacklevel=2)
+    remaining = num_devices // model
+    islands = math.gcd(population, remaining)
+    data = remaining // islands
+    return IslandLayout(devices=num_devices, islands=islands, data=data,
+                        model=model, population=population)

@@ -1,0 +1,129 @@
+"""Re-layout: resume a checkpointed trainer on a DIFFERENT topology.
+
+The fault-tolerance contract at fleet scale: when accelerators are lost
+(or gained), the launcher plans a new :class:`IslandLayout` from the
+surviving device count and training resumes from the latest checkpoint.
+Because checkpoints are saved as host numpy (full tensors) and all
+shardings are *functions* of the current layout, re-layout is: plan layout
+-> restore -> resize the population -> device_put.  The population resize
+is PBT mechanics (``repro.elastic.resize``): a shrink drops the least-fit
+members, a grow refills with clones of the fittest — and the attached
+``repro.rollout`` engine's replay buffers and env states ride along,
+gathered by the same member-index map, so survivors keep their collected
+experience bit-exactly.
+
+Worked example (save on 8 devices with 8 members, resume on 4 with 6;
+``donate=False`` because checkpointing reads the state)::
+
+    pcfg = PopulationConfig(size=8, backend="islands", donate=False)
+    trainer = PopTrainer(agent, pcfg, checkpoint_dir="/ckpt")
+    trainer.attach_rollout(env)
+    trainer.run_env_loop(100)
+    trainer.save(blocking=True)
+    # ... 4 of 8 accelerators survive; restart with a smaller population:
+    pcfg = PopulationConfig(size=6, backend="islands", donate=False)
+    trainer = PopTrainer(agent, pcfg, layout=plan_layout(4, 6),
+                         checkpoint_dir="/ckpt")
+    trainer.attach_rollout(env)
+    step, lineage = restore_elastic(trainer)   # worst 2 members dropped
+    trainer.run_env_loop(100)                  # training continues
+
+``relayout`` is the low-level placement helper (host pytree -> mesh via
+the ``repro.models.sharding`` rules) used for large single-member models.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.elastic.resize import plan_resize, resize_tree
+
+
+def relayout(tree, mesh):
+    """Place a host (or differently-sharded) pytree onto ``mesh`` using the
+    rule-derived shardings of ``repro.models.sharding``."""
+    from repro.models.sharding import param_specs
+    specs = param_specs(tree, mesh)
+    shardings = jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                             is_leaf=lambda x: isinstance(x, P))
+    return jax.device_put(tree, shardings)
+
+
+def restore_elastic(trainer, directory=None, *, step=None, layout=None):
+    """Restore ``trainer`` (and its attached rollout engine, if any) from a
+    checkpoint written by a trainer of a possibly different population size
+    on a possibly different device count.
+
+    The trainer must be freshly constructed for the NEW topology (its
+    ``pcfg.size`` is the target population; its strategy/hyper space must
+    match the checkpointed run so the pytree structures line up).  Returns
+    ``(saved_step, lineage)`` — ``lineage[i]`` is the checkpointed member
+    whose state member ``i`` now holds.  Raises ``FileNotFoundError`` when
+    no checkpoint exists (callers deciding between fresh start and elastic
+    resume should check ``manager.peek_extra()`` first, as
+    ``launch.train --resize auto`` does).
+
+    ``directory`` defaults to the trainer's own checkpoint dir; ``layout``
+    defaults to the trainer's island layout (islands backend) or plain
+    default-device placement.
+    """
+    from pathlib import Path
+
+    from repro.checkpoint import CheckpointManager
+    if directory is not None:
+        if not Path(directory).is_dir():   # manager would mkdir a typo'd
+            raise FileNotFoundError(       # path; keep restore read-only
+                f"restore_elastic: checkpoint directory {directory} does "
+                f"not exist")
+        mgr = CheckpointManager(directory)
+    elif trainer._mgr is not None:
+        mgr = trainer._mgr
+    else:
+        raise ValueError("restore_elastic: trainer has no checkpoint_dir; "
+                         "pass directory=")
+    step = mgr.latest() if step is None else step
+    if step is None:
+        raise FileNotFoundError(
+            f"restore_elastic: no checkpoint in {mgr.dir}; check "
+            f"manager.peek_extra() (None when empty) before calling, or "
+            f"start fresh")
+
+    template = (trainer.state, trainer.strategy.export_state())
+    (state, strat_state), extra = mgr.restore(template, step)
+    hypers = None if trainer.hypers is None else \
+        mgr.restore_aux("hypers", trainer.hypers, step)
+    old_n = extra.get("size")
+    if old_n is None:
+        old_n = jax.tree.leaves(trainer.agent.actor_params(state))[0].shape[0]
+    fitness = extra.get("fitness")
+    if old_n != trainer.n and fitness is None:
+        import warnings
+        warnings.warn(
+            "restore_elastic: checkpoint has no fitness record; resizing "
+            f"{old_n} -> {trainer.n} by member index, not by fitness",
+            stacklevel=2)
+    parents, lineage = plan_resize(old_n, trainer.n, fitness)
+
+    state = resize_tree(state, old_n, parents)
+    if hypers is not None:
+        hypers = resize_tree(hypers, old_n, parents)
+
+    place = layout.place if layout is not None else trainer._placement()
+    trainer.state = place(state)
+    if hypers is not None:   # keep freshly-drawn hypers when the source
+        trainer.hypers = place(hypers)  # run had none (null strategy)
+    if strat_state is not None:
+        trainer.strategy.import_state(strat_state)
+
+    if trainer._rollout is not None:
+        rstate = mgr.restore_aux("rollout",
+                                 trainer._rollout.export_state(), step)
+        if rstate is not None:
+            rstate = resize_tree(rstate, old_n, parents)
+            trainer._rollout.import_state(place(rstate))
+
+    trainer.step_count = extra["step"] + 1
+    trainer.last_fitness = None if fitness is None else \
+        np.asarray(fitness)[np.asarray(parents)]
+    return extra["step"], lineage

@@ -1,0 +1,97 @@
+"""Elastic population resize: drop the worst, refill with PBT clones.
+
+Population training is naturally elastic (the exploit/explore loop already
+replaces members wholesale), so a device-count change maps onto the same
+mechanics:
+
+  * shrink — keep the ``new_size`` fittest members (the rest would have
+    been exploited away at the next PBT step anyway);
+  * grow   — survivors keep their own state bit-exactly, and the new slots
+    are cloned from the fittest survivors round-robin, exactly what a PBT
+    exploit would produce (the next explore step perturbs the copies
+    apart).
+
+Everything operates on the *stacked population pytree* convention of
+``repro.core.population``: any leaf whose leading axis equals the old
+population size is resized (training state, hypers, replay buffers, env
+states alike); leaves without a population axis — a shared critic, CEM's
+distribution state — pass through untouched.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+
+def plan_resize(old_size: int, new_size: int, fitness=None):
+    """Member index map for a resize: ``(parents, lineage)``.
+
+    ``parents[i]`` is the OLD member whose state new member ``i`` receives;
+    ``lineage[i]`` mirrors the evolution-strategy convention (the old index
+    for members that keep/inherit a state).  Shrinks keep the ``new_size``
+    fittest (in original order); grows keep every member in place and fill
+    slots ``old_size..new_size`` with the fittest survivors round-robin.
+    Without fitness, shrinks keep the first ``new_size`` members and grows
+    clone from member 0 up.
+    """
+    if new_size < 1:
+        raise ValueError(
+            f"cannot resize a population to {new_size} members; training "
+            f"needs at least 1 (got new_size={new_size})")
+    rank = (np.argsort(np.asarray(fitness))[::-1] if fitness is not None
+            else np.arange(old_size))
+    if new_size <= old_size:
+        parents = np.sort(rank[:new_size])
+    else:
+        refill = rank[np.arange(new_size - old_size) % old_size]
+        parents = np.concatenate([np.arange(old_size), refill])
+    return parents.astype(np.int64), parents.astype(np.int64)
+
+
+def resize_tree(tree, old_size: int, parents):
+    """Apply a :func:`plan_resize` index map to a stacked pytree: leaves
+    with leading axis ``old_size`` are gathered by ``parents``; all other
+    leaves (no population axis) are returned unchanged."""
+    parents = np.asarray(parents)
+
+    def take(x):
+        if hasattr(x, "ndim") and x.ndim >= 1 and x.shape[0] == old_size:
+            return x[parents]
+        return x
+    return jax.tree.map(take, tree)
+
+
+def shrink_population(pop_tree, fitness, new_size: int):
+    """Keep the ``new_size`` fittest members (elastic population shrink).
+
+    Returns ``(tree, keep)`` with ``keep`` the sorted surviving indices.
+    ``new_size`` below 1 raises — an empty population is never a valid
+    training state, and silently returning zero-length leaves used to
+    poison every downstream vmap.
+    """
+    fitness = np.asarray(fitness)
+    if not 1 <= new_size <= fitness.shape[0]:
+        raise ValueError(
+            f"shrink_population: new_size must be in [1, {fitness.shape[0]}]"
+            f", got {new_size}")
+    keep, _ = plan_resize(fitness.shape[0], new_size, fitness)
+    return resize_tree(pop_tree, fitness.shape[0], keep), keep
+
+
+def grow_population(pop_tree, fitness, new_size: int):
+    """Grow to ``new_size`` members: survivors stay in place (bit-exact),
+    new slots are PBT-style clones of the fittest.  Returns
+    ``(tree, parents)``.  The old size comes from ``fitness`` (length N) —
+    never from the first tree leaf, which may be a non-population leaf
+    like a shared critic."""
+    fitness = np.asarray(fitness)
+    if fitness.ndim != 1:
+        raise ValueError("grow_population needs the (N,) fitness of the "
+                         "current members (it defines the old size and "
+                         f"the clone ranking); got shape {fitness.shape}")
+    old = fitness.shape[0]
+    if new_size < old:
+        raise ValueError(f"grow_population: new_size={new_size} < {old}; "
+                         "use shrink_population")
+    parents, _ = plan_resize(old, new_size, fitness)
+    return resize_tree(pop_tree, old, parents), parents

@@ -8,11 +8,17 @@ Production features exercised here (scaled down to whatever devices exist):
   * the paper's protocol: one jit'd vmapped train step updates every member,
     per-member learning-rate scale as a dynamic hyperparameter
   * pluggable evolution (--strategy pbt|cem|none) and update backend
-    (--backend vectorized|sequential|sharded) as one-line config changes
+    (--backend vectorized|sequential|sharded|islands) as one-line config
+    changes; islands plans an ``repro.elastic.IslandLayout`` over
+    ``--devices`` accelerators (default: all of them)
   * on-device PBT exploit/explore every --pbt-interval steps (fitness =
     -loss window mean, window capped at the config's fitness_window)
   * checkpoint/restart: atomic async checkpoints every --ckpt-every steps,
     ``--resume auto`` restarts from the latest one (fault tolerance)
+  * elastic restart: ``--resize auto`` accepts a checkpoint whose
+    population differs from ``--population`` — the worst members are
+    dropped (or PBT clones refill) via ``repro.elastic.restore_elastic``,
+    so losing accelerators between runs never strands a checkpoint
   * synthetic sharded token pipeline with restart-stable streams.
 """
 from __future__ import annotations
@@ -40,13 +46,21 @@ def main(argv=None):
     ap.add_argument("--strategy", default="pbt",
                     choices=["pbt", "cem", "none"])
     ap.add_argument("--backend", default="vectorized",
-                    choices=["vectorized", "sequential", "sharded"])
+                    choices=["vectorized", "sequential", "sharded",
+                             "islands"])
     ap.add_argument("--pbt-interval", type=int, default=50)
     ap.add_argument("--smoke", action="store_true",
                     help="use the reduced same-family config (CPU-sized)")
     ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
     ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--resume", default="auto", choices=["auto", "none"])
+    ap.add_argument("--devices", type=int, default=0,
+                    help="devices to lay the islands over (0 = all); the "
+                    "layout is planned by repro.elastic.plan_layout")
+    ap.add_argument("--resize", default="strict", choices=["strict", "auto"],
+                    help="auto: resume a checkpoint whose population size "
+                    "differs from --population via elastic re-layout "
+                    "(worst members dropped / PBT clones refill)")
     ap.add_argument("--lr", type=float, default=3e-4)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
@@ -64,15 +78,29 @@ def main(argv=None):
         size=n, strategy=args.strategy, backend=args.backend,
         pbt_interval=args.pbt_interval,
         hyper_space=HyperSpace(log_uniform=(("lr_scale", 0.1, 10.0),)))
+    layout = None
+    if args.backend == "islands":
+        from repro.elastic import plan_layout
+        layout = plan_layout(args.devices or len(jax.devices()), n)
+        print(f"[train] {layout}")
     trainer = PopTrainer(LMAgent(cfg, tcfg), pcfg, seed=args.seed,
-                         checkpoint_dir=args.ckpt_dir)
+                         layout=layout, checkpoint_dir=args.ckpt_dir)
 
     start_step = 0
     if args.resume == "auto":
-        resumed = trainer.resume()
+        meta = trainer._mgr.peek_extra()
+        if (args.resize == "auto" and meta is not None
+                and meta.get("size", n) != n):
+            from repro.elastic import restore_elastic
+            resumed, lineage = restore_elastic(trainer)
+            print(f"[train] elastic resume from step {resumed}: population "
+                  f"{meta['size']} -> {n}, lineage={np.asarray(lineage)}")
+        else:
+            resumed = trainer.resume()
+            if resumed is not None:
+                print(f"[train] resumed from step {resumed}")
         if resumed is not None:
             start_step = resumed + 1
-            print(f"[train] resumed from step {resumed}")
 
     gen = host_batches(cfg.vocab_size, args.batch * n, args.seq_len,
                        seed=args.seed, start_step=start_step)

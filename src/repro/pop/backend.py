@@ -11,16 +11,25 @@ a different call site:
   * ``sequential`` — the paper's *Jax (Sequential)* baseline: one jit'd
                      single-agent step looped over members.
   * ``sharded``    — vectorized, with the population axis sharded over the
-                     device mesh (islands of members per accelerator, §5.1);
-                     the trainer places the state via
+                     device mesh by GSPMD; the trainer places the state via
                      ``distributed.shard_population``.
+  * ``islands``    — member groups shard_mapped over the ``"pop"`` axis of
+                     an ``repro.elastic.IslandLayout`` (the paper's §5.1
+                     islands-per-accelerator topology made explicit);
+                     registered by ``repro.elastic.islands``, resolved
+                     lazily on first use.
 
 For ``population_level`` agents (shared critic, §4.2) the same names map to
 the paper's averaged-loss update (vectorized) vs the original CEM-RL
 interleaved ordering (sequential).
+
+Builders are ``builder(agent, num_steps, donate)``; a builder that also
+accepts a ``mesh`` keyword (the islands backend) receives the trainer's
+mesh through ``make_update(..., mesh=...)``.
 """
 from __future__ import annotations
 
+import inspect
 from enum import Enum
 
 import jax
@@ -69,19 +78,25 @@ def register_backend(name: str, builder):
 
 
 def make_update(agent, backend="vectorized", *, num_steps: int = 1,
-                donate: bool = True):
+                donate: bool = True, mesh=None):
     """Build ``fn(pop_state, batches, hypers) -> (pop_state, metrics)``.
 
     batches: leaves (N, ...) when num_steps == 1, else (num_steps, N, ...)
     (per-member agents); population-level agents always take (N, B, ...).
+    ``mesh`` is forwarded to builders that accept it (islands backend).
     """
     try:
         key = UpdateBackend(backend)
     except ValueError:
         key = backend
     builder = BACKENDS.get(key)
+    if builder is None and key == "islands":
+        import repro.elastic  # noqa: F401  registers the islands backend
+        builder = BACKENDS.get(key)
     if builder is None:
         names = sorted(b.value if isinstance(b, UpdateBackend) else str(b)
                        for b in BACKENDS)
         raise ValueError(f"unknown backend {backend!r}; registered: {names}")
+    if "mesh" in inspect.signature(builder).parameters:
+        return builder(agent, num_steps, donate, mesh=mesh)
     return builder(agent, num_steps, donate)

@@ -20,7 +20,13 @@ Responsibilities:
     unbounded-list leak of the old driver is gone)
   * the evolve cadence (every ``pcfg.pbt_interval`` trainer steps; skipped
     entirely for null strategies)
-  * checkpoint/resume via ``repro.checkpoint`` (state + hypers + step).
+  * checkpoint/resume via ``repro.checkpoint`` (state + strategy internals,
+    with hypers and the attached rollout engine's buffers/env states as aux
+    trees, plus size + fitness extras — everything
+    ``repro.elastic.restore_elastic`` needs to resume on a different
+    device count or population size)
+  * device placement: ``backend="islands"`` plans (or takes ``layout=``)
+    an ``repro.elastic.IslandLayout`` and places state/hypers across it.
 """
 from __future__ import annotations
 
@@ -38,7 +44,7 @@ from repro.pop.strategy import make_strategy
 class PopTrainer:
     def __init__(self, agent, pcfg: PopulationConfig | None = None, *,
                  seed: int = 0, key=None, strategy=None, mesh=None,
-                 checkpoint_dir=None, keep: int = 2):
+                 layout=None, checkpoint_dir=None, keep: int = 2):
         self.agent = agent
         self.pcfg = pcfg = pcfg if pcfg is not None else PopulationConfig()
         self.n = pcfg.size
@@ -52,20 +58,29 @@ class PopTrainer:
         self.state = self.strategy.bind(k_bind, agent, self.state)
         self.hypers = self.strategy.init_hypers(k_hyp, self.n)
 
-        self._update = make_update(agent, pcfg.backend,
-                                   num_steps=pcfg.num_steps,
-                                   donate=pcfg.donate)
         try:
             backend = UpdateBackend(pcfg.backend)
         except ValueError:
             backend = pcfg.backend
+        self.layout = None
         if backend is UpdateBackend.SHARDED:
             from repro.core.distributed import shard_population
             from repro.launch.mesh import make_host_mesh
             self.mesh = mesh if mesh is not None else make_host_mesh(model=1)
             self.state = shard_population(self.state, self.mesh)
+        elif backend == "islands":
+            from repro.elastic import plan_layout
+            self.layout = layout if layout is not None else \
+                plan_layout(len(jax.devices()), self.n)
+            self.mesh = mesh if mesh is not None else self.layout.mesh
+            self.state = self.layout.place(self.state)
+            if self.hypers is not None:
+                self.hypers = self.layout.place(self.hypers)
         else:
             self.mesh = mesh
+        self._update = make_update(agent, pcfg.backend,
+                                   num_steps=pcfg.num_steps,
+                                   donate=pcfg.donate, mesh=self.mesh)
 
         self._window: deque = deque(maxlen=pcfg.fitness_window)
         self.last_fitness = None  # the (N,) fitness used at the last evolve
@@ -117,6 +132,7 @@ class PopTrainer:
                 "next fused iteration donates (and overwrites) its buffers "
                 "— build the PopulationConfig with donate=False")
         self.key, k = jax.random.split(self.key)
+        engine_kwargs.setdefault("mesh", self.mesh)
         self._rollout = RolloutEngine(self.agent, self.pcfg, env, key=k,
                                       init_state=self.state,
                                       hypers=self.hypers, **engine_kwargs)
@@ -208,32 +224,84 @@ class PopTrainer:
         return self.agent.actor_params(self.state)
 
     def save(self, extra: dict | None = None, *, blocking: bool = False):
+        """Checkpoint the full elastic-resumable state: the main tree
+        (population state + strategy internals), hypers and the attached
+        rollout engine's replay buffers/env states as aux trees, and — in
+        the JSON extras — the population size and current fitness, so
+        ``repro.elastic.restore_elastic`` can resize by fitness when the
+        next run has a different device count or population.
+
+        Only the live fitness window is recorded: ``last_fitness``
+        describes pre-evolve states that may just have been replaced
+        (CEM/DvD redraw members wholesale), so right after an evolve the
+        checkpoint carries no fitness and an elastic resize falls back to
+        by-index selection, loudly."""
         if self._mgr is None:
             raise ValueError("PopTrainer built without checkpoint_dir")
+        fit = self.fitness()
+        meta = dict(extra or {}, size=self.n,
+                    fitness=None if fit is None
+                    else np.asarray(fit, dtype=np.float64).tolist())
+        # hypers and the rollout engine state are aux trees with their own
+        # templates, so a restoring trainer that lacks either (a null
+        # strategy after an elastic shrink to size 1; no attached rollout)
+        # can still restore the main tree
+        aux = {}
+        if self.hypers is not None:
+            aux["hypers"] = self.hypers
+        if self._rollout is not None:
+            aux["rollout"] = self._rollout.export_state()
         save = self._mgr.save if blocking else self._mgr.save_async
         save(self.step_count - 1,
-             (self.state, self.hypers, self.strategy.export_state()),
-             extra or {})
+             (self.state, self.strategy.export_state()), meta, aux=aux)
 
     def resume(self):
         """Restore the latest checkpoint if one exists (population state,
-        hypers, strategy internals, step); returns the restored step (the
-        value saved by ``save``) or None."""
+        hypers, strategy internals, rollout buffers/env states when an
+        engine is attached, step); returns the restored step (the value
+        saved by ``save``) or None.  Same-topology resume only — resuming
+        onto a different population size or device count goes through
+        ``repro.elastic.restore_elastic``."""
         if self._mgr is None or self._mgr.latest() is None:
             return None
-        (state, hypers, strat_state), extra = self._mgr.restore(
-            (self.state, self.hypers, self.strategy.export_state()))
+        (state, strat_state), extra = self._mgr.restore(
+            (self.state, self.strategy.export_state()))
         restored_n = jax.tree.leaves(self.agent.actor_params(state))[0].shape[0]
         if restored_n != self.n:
             raise ValueError(
                 f"checkpoint holds a population of {restored_n} but the "
-                f"config says size={self.n}; pass the original --population "
-                f"or start fresh (--resume none)")
-        self.state, self.hypers = state, hypers
+                f"config says size={self.n}; resume with the original size, "
+                f"or resize explicitly via repro.elastic.restore_elastic "
+                f"(launch.train: --resize auto)")
+        # restored leaves are host numpy: re-establish the same placement
+        # __init__ gave the fresh state (islands layout / sharded mesh)
+        place = self._placement()
+        self.state = place(state)
+        if self.hypers is not None:
+            hypers = self._mgr.restore_aux("hypers", self.hypers)
+            if hypers is not None:
+                self.hypers = place(hypers)
         if strat_state is not None:
             self.strategy.import_state(strat_state)
+        if self._rollout is not None:
+            rstate = self._mgr.restore_aux(
+                "rollout", self._rollout.export_state())
+            if rstate is not None:
+                self._rollout.import_state(rstate)
         self.step_count = extra["step"] + 1
         return extra["step"]
+
+    def _placement(self):
+        """How this trainer places a restored host pytree: the islands
+        layout, the sharded-backend mesh, or plain default-device put —
+        the same choice ``__init__`` made for the fresh state (and that
+        ``repro.elastic.restore_elastic`` reuses)."""
+        if self.layout is not None:
+            return self.layout.place
+        if self.mesh is not None:
+            from repro.core.distributed import shard_population
+            return lambda tree: shard_population(tree, self.mesh)
+        return jax.device_put
 
     def wait(self):
         if self._mgr is not None:

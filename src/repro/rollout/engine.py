@@ -59,7 +59,7 @@ class RolloutEngine:
                  num_envs: int = 8, collect_steps: int = 32,
                  batch_size: int = 128, buffer_capacity: int = 100_000,
                  eval_envs: int = 4, eval_steps: int | None = None,
-                 explore_fn=None):
+                 explore_fn=None, mesh=None):
         self.agent = agent
         self.env = env
         self.n = pcfg.size
@@ -82,13 +82,14 @@ class RolloutEngine:
 
         if agent.population_level:
             # population_update consumes (N, B, ...) per call; chain K calls
-            upd1 = make_update(agent, pcfg.backend, num_steps=1, donate=False)
+            upd1 = make_update(agent, pcfg.backend, num_steps=1,
+                               donate=False, mesh=mesh)
             self._update_k = (chain_steps(upd1, self.num_steps)
                               if self.num_steps > 1 else upd1)
         else:
             self._update_k = make_update(agent, pcfg.backend,
                                          num_steps=self.num_steps,
-                                         donate=False)
+                                         donate=False, mesh=mesh)
 
         # the skip branch of the can-sample gate must return metrics of the
         # same structure as a real update — resolve shapes abstractly once
@@ -149,6 +150,26 @@ class RolloutEngine:
         state, self.bufs, self.vstate, metrics, stats, did = \
             self._iteration(state, self.bufs, self.vstate, hypers, key)
         return state, metrics, stats, did
+
+    # -------------------------------------------------- elastic re-layout
+    def export_state(self):
+        """The engine's mutable device state — the population of replay
+        buffers and the env states (with their episode accounting) — as one
+        pytree, every leaf carrying the leading population axis, so
+        ``repro.elastic`` can checkpoint it and gather it by member index
+        across a resize."""
+        return {"bufs": self.bufs, "vstate": self.vstate}
+
+    def import_state(self, state):
+        """Install what :meth:`export_state` produced (possibly restored
+        from a checkpoint and resized to this engine's population)."""
+        n = jax.tree.leaves(state["bufs"])[0].shape[0]
+        if n != self.n:
+            raise ValueError(f"rollout state holds {n} members but the "
+                             f"engine was built for {self.n}; resize with "
+                             f"repro.elastic.resize_tree first")
+        self.bufs = jax.tree.map(jnp.asarray, state["bufs"])
+        self.vstate = jax.tree.map(jnp.asarray, state["vstate"])
 
     @property
     def env_steps_per_iteration(self) -> int:

@@ -1,0 +1,69 @@
+#!/usr/bin/env python
+"""Fail on broken intra-repo markdown links (the docs CI job).
+
+Scans ``README.md``, ``ROADMAP.md`` and everything under ``docs/`` for
+``[text](target)`` links and verifies every non-http target resolves to a
+file or directory relative to the linking file (fragment anchors are
+stripped; pure-anchor and mailto links are skipped).  Exit code 1 lists
+every broken link — a docs site whose internal links rot silently is worse
+than none.
+
+    python tools/check_links.py            # repo root inferred
+    python tools/check_links.py path/to/repo
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+# [text](target) — excluding images is pointless (same rules apply), but
+# skip reference-style and code spans by only matching inline links
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+
+
+def iter_markdown(root: Path):
+    yield from (p for p in (root / "docs").glob("**/*.md")
+                if (root / "docs").is_dir())
+    for name in ("README.md", "ROADMAP.md"):
+        p = root / name
+        if p.exists():
+            yield p
+
+
+def check_file(md: Path, root: Path) -> list[str]:
+    errors = []
+    text = md.read_text()
+    # strip fenced code blocks: links inside examples aren't navigation
+    text = re.sub(r"```.*?```", "", text, flags=re.S)
+    for match in LINK_RE.finditer(text):
+        target = match.group(1)
+        if target.startswith(("http://", "https://", "mailto:", "#")):
+            continue
+        path = target.split("#", 1)[0]
+        if not path:
+            continue
+        resolved = (md.parent / path).resolve()
+        if not resolved.exists():
+            errors.append(f"{md.relative_to(root)}: broken link -> {target}")
+    return errors
+
+
+def main(argv=None) -> int:
+    argv = sys.argv[1:] if argv is None else argv
+    root = Path(argv[0]).resolve() if argv else \
+        Path(__file__).resolve().parent.parent
+    errors = []
+    checked = 0
+    for md in iter_markdown(root):
+        checked += 1
+        errors.extend(check_file(md, root))
+    for err in errors:
+        print(err)
+    print(f"checked {checked} markdown files: "
+          f"{'FAIL' if errors else 'ok'} ({len(errors)} broken links)")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
