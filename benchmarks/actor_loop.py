@@ -2,15 +2,23 @@
 
 The paper's central claim is that population training costs ~one agent only
 when BOTH phases — acting and updating — are compiled and vectorized over
-the population.  This harness measures one full train iteration
-(collect ``collect_steps`` × ``num_envs`` env steps per member -> insert ->
-sample -> ``num_updates`` chained TD3 updates) two ways:
+the population.  This harness measures one full train iteration two ways
+for BOTH experience kinds of the pipeline:
+
+  td3 (off-policy, replay): collect ``collect_steps`` × ``num_envs`` env
+      steps per member -> insert -> sample -> ``num_updates`` chained
+      updates.
+  ppo (on-policy, trajectory): collect (recording log_prob/value extras)
+      -> on-device GAE -> ``epochs`` × shuffled minibatch updates.
 
   fused    — ``repro.rollout`` engine: ONE jitted call, everything stays on
-             device (``PopTrainer.env_iteration``).
-  unfused  — the pre-engine loop shape: four separately-jitted phases
-             (collect / insert / sample / update) with a host sync between
-             each, which is what hand-rolled loops pay every iteration.
+             device (``PopTrainer.env_iteration``).  The fused arm also
+             records ``single_jit``: whether a post-warmup iteration runs
+             clean under ``jax.transfer_guard("disallow")`` — the
+             no-host-round-trip property the engine promises.
+  unfused  — the pre-engine loop shape: separately-jitted phases with a
+             host sync between each, which is what hand-rolled loops pay
+             every iteration.
 
 The default shape follows the paper's acting setup — ONE env per member,
 many acting steps per iteration, a short chained update — because that is
@@ -19,10 +27,11 @@ about the *loop*, not about raw matmul throughput (this box has 2 CPU
 cores, so a compute-bound update trivially scales linearly and would bury
 the acting-side signal the paper is about).
 
-Reported per population size: ms per iteration, env interactions per
-second, iteration time relative to population 1 (the paper's
+Reported per (algo, population size): ms per iteration, env interactions
+per second, iteration time relative to population 1 (the paper's
 minimal-overhead claim), and the fused-over-unfused speedup.
-``--json PATH`` additionally dumps the rows as JSON for trend tracking.
+``--json PATH`` additionally dumps the rows as JSON for trend tracking
+(same row schema for both algos).
 """
 import argparse
 import json
@@ -35,9 +44,8 @@ from benchmarks.common import emit
 from repro.configs.base import PopulationConfig
 from repro.data import buffer_add, buffer_sample
 from repro.envs import make
-from repro.pop import ModuleAgent, PopTrainer, make_update
+from repro.pop import ModuleAgent, PopTrainer, PPOAgent, make_update
 from repro.rl import td3
-
 
 HIDDEN = (32, 32)   # small nets leave the 2 CPU cores idle capacity, the
                     # accelerator regime the paper's scaling claim assumes;
@@ -51,7 +59,7 @@ def _timed_rounds(cells, iters: int = 10, warmup: int = 2):
     Interleaving + min is deliberate: this box is time-shared and stolen-CPU
     noise comes in phases that last longer than one arm's measurement, so
     timing the arms back-to-back makes them incomparable.  One round times
-    every (pop, impl) cell once; the per-cell minimum over all rounds
+    every (algo, pop, impl) cell once; the per-cell minimum over all rounds
     samples every machine phase for every cell."""
     for _ in range(warmup):
         for fn in cells.values():
@@ -65,24 +73,49 @@ def _timed_rounds(cells, iters: int = 10, warmup: int = 2):
     return best
 
 
-def _trainer(n, num_envs, collect_steps, num_updates, batch_size, donate):
+def _trainer(algo, n, num_envs, collect_steps, num_updates, batch_size,
+             epochs, donate):
     env = make("pendulum")
-    pcfg = PopulationConfig(size=n, strategy="none", backend="vectorized",
-                            num_steps=num_updates, donate=donate)
-    agent = ModuleAgent(td3, env.spec.obs_dim, env.spec.act_dim,
-                        hidden=HIDDEN)
-    trainer = PopTrainer(agent, pcfg, seed=0)
-    trainer.attach_rollout(env, num_envs=num_envs,
-                           collect_steps=collect_steps,
-                           batch_size=batch_size, buffer_capacity=10_000,
-                           eval_envs=1)
+    if algo == "ppo":
+        agent = PPOAgent(env.spec.obs_dim, env.spec.act_dim, hidden=HIDDEN)
+        pcfg = PopulationConfig(size=n, strategy="none",
+                                backend="vectorized", donate=donate)
+        trainer = PopTrainer(agent, pcfg, seed=0)
+        trainer.attach_rollout(env, num_envs=num_envs,
+                               collect_steps=collect_steps,
+                               batch_size=batch_size, epochs=epochs,
+                               eval_envs=1)
+    else:
+        agent = ModuleAgent(td3, env.spec.obs_dim, env.spec.act_dim,
+                            hidden=HIDDEN)
+        pcfg = PopulationConfig(size=n, strategy="none",
+                                backend="vectorized", num_steps=num_updates,
+                                donate=donate)
+        trainer = PopTrainer(agent, pcfg, seed=0)
+        trainer.attach_rollout(env, num_envs=num_envs,
+                               collect_steps=collect_steps,
+                               batch_size=batch_size, buffer_capacity=10_000,
+                               eval_envs=1)
     return agent, trainer
 
 
-def _unfused_iteration(agent, trainer, n, collect_steps, num_updates,
-                       batch_size):
-    """The pre-engine loop: same phases, separate dispatches, host sync
-    between each (hand-rolled loops synced on buffer counters / fitness)."""
+def _probe_single_jit(trainer) -> bool:
+    """The acceptance probe: after warm-up, one fused iteration must not
+    move a single byte between host and device implicitly."""
+    trainer.env_iteration()   # compile outside the guard
+    try:
+        with jax.transfer_guard("disallow"):
+            trainer.env_iteration()
+        return True
+    except Exception:
+        return False
+
+
+def _unfused_td3_iteration(agent, trainer, n, collect_steps, num_updates,
+                           batch_size):
+    """The pre-engine off-policy loop: same phases, separate dispatches,
+    host sync between each (hand-rolled loops synced on buffer counters /
+    fitness)."""
     engine = trainer.rollout
     collector = engine.collector
     collect = jax.jit(lambda actors, vs, key: collector.collect(
@@ -119,39 +152,87 @@ def _unfused_iteration(agent, trainer, n, collect_steps, num_updates,
     return iteration
 
 
-def run(pop_sizes=(1, 2, 4, 8, 16), num_envs=1, collect_steps=256,
-        num_updates=2, batch_size=16, iters=10, json_path=None):
-    emit(["bench", "impl", "pop", "ms_per_iter", "env_steps_per_s",
-          "rel_to_pop1", "fused_speedup"])
-    cells = {}
-    for n in pop_sizes:
-        for impl in ("fused", "unfused"):
-            agent, trainer = _trainer(n, num_envs, collect_steps,
-                                      num_updates, batch_size,
-                                      donate=impl == "fused")
-            if impl == "fused":
-                cells[(n, impl)] = trainer.env_iteration
-            else:
-                cells[(n, impl)] = _unfused_iteration(
-                    agent, trainer, n, collect_steps, num_updates,
-                    batch_size)
+def _unfused_ppo_iteration(agent, trainer, collect_steps):
+    """The pre-engine on-policy loop: collect, then GAE + minibatch
+    building, then the epoch update — three dispatches with host syncs
+    (hand-rolled PPO loops also pull the rollout back for numpy GAE; the
+    host sync stands in for that round-trip)."""
+    engine = trainer.rollout
+    collector = engine.collector
+    collect = jax.jit(lambda actors, vs, key: collector.collect(
+        actors, vs, key, collect_steps, flat=False))
+    from repro.data import traj_add, traj_reset
+    store = jax.jit(lambda bufs, traj: jax.vmap(traj_add)(
+        jax.vmap(traj_reset)(bufs), traj))
+    batches_fn = jax.jit(
+        lambda bufs, actors, key: engine.population_batches(
+            bufs, actors, None, key))
+    update = make_update(agent, "vectorized", num_steps=engine.num_steps,
+                         donate=False)
+
+    box = {"state": trainer.state, "bufs": engine.bufs,
+           "vstate": engine.vstate, "key": jax.random.PRNGKey(1)}
+
+    def iteration():
+        box["key"], kc, kp = jax.random.split(box["key"], 3)
+        actors = agent.actor_params(box["state"])
+        box["vstate"], traj = collect(actors, box["vstate"], kc)
+        returns = np.asarray(traj["reward"]).sum(-1)   # host fitness read
+        box["bufs"] = store(box["bufs"], traj)
+        batches = batches_fn(box["bufs"], actors, kp)
+        jax.block_until_ready(batches)
+        box["state"], metrics = update(box["state"], batches, None)
+        return metrics
+
+    return iteration
+
+
+def run(pop_sizes=(1, 2, 4, 8, 16), algos=("td3", "ppo"), num_envs=1,
+        collect_steps=256, num_updates=2, batch_size=16, epochs=1,
+        iters=10, json_path=None):
+    emit(["bench", "algo", "impl", "pop", "ms_per_iter", "env_steps_per_s",
+          "rel_to_pop1", "fused_speedup", "single_jit"])
+    cells, single_jit = {}, {}
+    for algo in algos:
+        for n in pop_sizes:
+            for impl in ("fused", "unfused"):
+                agent, trainer = _trainer(algo, n, num_envs, collect_steps,
+                                          num_updates, batch_size, epochs,
+                                          donate=impl == "fused")
+                if impl == "fused":
+                    single_jit[(algo, n)] = _probe_single_jit(trainer)
+                    cells[(algo, n, impl)] = trainer.env_iteration
+                elif algo == "ppo":
+                    cells[(algo, n, impl)] = _unfused_ppo_iteration(
+                        agent, trainer, collect_steps)
+                else:
+                    cells[(algo, n, impl)] = _unfused_td3_iteration(
+                        agent, trainer, n, collect_steps, num_updates,
+                        batch_size)
     times = _timed_rounds(cells, iters=iters, warmup=2)
 
     rows = []
-    for n in pop_sizes:
-        env_steps = n * num_envs * collect_steps
-        for impl in ("fused", "unfused"):
-            t = times[(n, impl)]
-            row = {"bench": "actor_loop", "impl": impl, "pop": n,
-                   "ms_per_iter": round(1e3 * t, 3),
-                   "env_steps_per_s": round(env_steps / t, 1),
-                   "rel_to_pop1": round(t / times[(pop_sizes[0], impl)], 2),
-                   "fused_speedup": round(
-                       times[(n, "unfused")] / times[(n, "fused")], 2)}
-            rows.append(row)
-            emit([row[k] for k in ("bench", "impl", "pop", "ms_per_iter",
-                                   "env_steps_per_s", "rel_to_pop1",
-                                   "fused_speedup")])
+    for algo in algos:
+        for n in pop_sizes:
+            env_steps = n * num_envs * collect_steps
+            for impl in ("fused", "unfused"):
+                t = times[(algo, n, impl)]
+                row = {"bench": "actor_loop", "algo": algo, "impl": impl,
+                       "pop": n,
+                       "ms_per_iter": round(1e3 * t, 3),
+                       "env_steps_per_s": round(env_steps / t, 1),
+                       "rel_to_pop1": round(
+                           t / times[(algo, pop_sizes[0], impl)], 2),
+                       "fused_speedup": round(
+                           times[(algo, n, "unfused")]
+                           / times[(algo, n, "fused")], 2),
+                       "single_jit": (single_jit[(algo, n)]
+                                      if impl == "fused" else None)}
+                rows.append(row)
+                emit([row[k] for k in ("bench", "algo", "impl", "pop",
+                                       "ms_per_iter", "env_steps_per_s",
+                                       "rel_to_pop1", "fused_speedup",
+                                       "single_jit")])
     if json_path:
         with open(json_path, "w") as f:
             json.dump(rows, f, indent=2)

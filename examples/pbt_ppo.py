@@ -1,0 +1,90 @@
+"""PBT over population-vectorized PPO — the on-policy end of the pipeline.
+
+The GPU-accelerated PBT benchmarks this repo positions against (Shahid et
+al. 2024; Jaderberg et al.'s original PBT) tune PPO, not replay-buffer
+algorithms; this example is that scenario on the shared experience
+pipeline: the SAME ``PopTrainer.attach_rollout`` call site as
+``pbt_td3.py``, but the agent declares ``experience_kind="trajectory"`` so
+the fused iteration becomes collect (recording each member's log_prob /
+value extras) -> on-device GAE -> shuffled epoch/minibatch updates — still
+ONE jitted donated call per iteration.
+
+PBT tunes the per-member ``lr`` / ``clip_eps`` / ``entropy_coef`` (the
+update side) and ``gae_lambda`` (the advantage side) — all dynamic inputs
+to the one compiled iteration, never a recompile.
+
+    PYTHONPATH=src python examples/pbt_ppo.py [--population 8] [--iters 40]
+"""
+import argparse
+import time
+
+import numpy as np
+
+from repro.configs.base import HyperSpace, PopulationConfig
+from repro.envs import make
+from repro.pop import PopTrainer, PPOAgent
+
+SPACE = HyperSpace(
+    log_uniform=(("lr", 1e-5, 1e-3),),
+    uniform=(("clip_eps", 0.1, 0.3), ("entropy_coef", 0.0, 0.03),
+             ("gae_lambda", 0.9, 1.0)))
+
+
+def run(population=8, iters=40, num_envs=8, collect_steps=64,
+        epochs=4, batch_size=128, pbt_every=5, backend="vectorized",
+        env_name="pendulum", ckpt_dir="/tmp/pbt_ppo_ckpt", seed=0):
+    env = make(env_name)
+    n = population
+    pcfg = PopulationConfig(
+        size=n, strategy="pbt", backend=backend, pbt_interval=pbt_every,
+        exploit_frac=0.3, hyper_space=SPACE, fitness_window=5,
+        donate=False)  # async checkpoints read the state
+    agent = PPOAgent(env.spec.obs_dim, env.spec.act_dim,
+                     discrete=env.spec.discrete)
+    trainer = PopTrainer(agent, pcfg, seed=seed, checkpoint_dir=ckpt_dir)
+    # on-policy knobs: each iteration consumes the whole fresh rollout of
+    # collect_steps x num_envs transitions as epochs x minibatches
+    trainer.attach_rollout(env, num_envs=num_envs,
+                           collect_steps=collect_steps,
+                           batch_size=batch_size, epochs=epochs, eval_envs=2)
+
+    t0 = time.time()
+    last = {"fitness": None}
+
+    def on_iter(it, metrics, stats, fitness, lineage):
+        if fitness is not None:
+            last["fitness"] = fitness
+        if lineage is not None:
+            fit = trainer.last_fitness
+            print(f"[pbt] iter {it + 1} fitness best={float(fit.max()):+.1f} "
+                  f"parents={np.asarray(lineage)}")
+        if (it + 1) % 10 == 0:
+            trainer.save()
+            kl = float(np.asarray(metrics["approx_kl"]).mean())
+            print(f"iter {it + 1}: best fitness "
+                  f"{float(last['fitness'].max()):+.2f} "
+                  f"mean {float(last['fitness'].mean()):+.2f} "
+                  f"kl {kl:+.4f} ({time.time() - t0:.1f}s)", flush=True)
+
+    trainer.run_env_loop(iters, eval_every=1, on_iter=on_iter)
+    trainer.wait()
+    if last["fitness"] is None:
+        last["fitness"] = np.asarray(trainer.evaluate_fitness())
+    best = float(np.max(last["fitness"]))
+    print(f"done: best final fitness {best:+.2f} in {time.time() - t0:.1f}s")
+    return best
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--population", type=int, default=8)
+    ap.add_argument("--iters", type=int, default=40)
+    ap.add_argument("--env", default="pendulum",
+                    choices=["pendulum", "reacher", "cartpole",
+                             "mountain_car", "acrobot"])
+    ap.add_argument("--backend", default="vectorized",
+                    choices=["vectorized", "sequential", "sharded",
+                             "islands"])
+    args = ap.parse_args()
+    run(population=args.population, iters=args.iters, env_name=args.env,
+        backend=args.backend)

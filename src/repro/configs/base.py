@@ -152,6 +152,9 @@ class PopulationConfig:
     backend: str = "vectorized"          # repro.pop.BACKENDS key
     num_steps: int = 1                   # chained update steps per call (§4.1)
     donate: bool = True                  # donate population buffers under jit
+    fused_adam: bool = False             # kernels/pop_adam for population-
+                                         # level optimizer steps (TPU; jnp
+                                         # fallback elsewhere)
     pbt_interval: int = 100_000          # trainer steps between evolve calls
     exploit_frac: float = 0.3            # paper §B.1: bottom/top 30%
     perturb_prob: float = 0.5            # resample vs perturb

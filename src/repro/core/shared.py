@@ -67,7 +67,8 @@ def _member_critic_loss(critic, target_policy, target_critic, batch, key, h):
 
 
 def make_shared_critic_update(*, dvd_coef_fn=None, probe_size: int = 20,
-                              train_frac: float = 1.0):
+                              train_frac: float = 1.0,
+                              fused_adam: bool = False):
     """Returns jit-able ``update(state, batches, hypers) -> (state, metrics)``.
 
     batches: pytree with leading (N, B, ...) — one batch per member (§4.2:
@@ -77,7 +78,17 @@ def make_shared_critic_update(*, dvd_coef_fn=None, probe_size: int = 20,
     members (CEM-RL trains half the sampled policies, Algorithm 1): the
     critic loss averages over the trainees and the remaining members'
     policies/optimizers are left untouched.
+
+    ``fused_adam`` routes the per-member policy Adam step — the one
+    population-level optimizer application in the repo — through
+    ``repro.optim.population_adam`` (the ``kernels/pop_adam`` Pallas path
+    on TPU, a numerically identical jnp fallback elsewhere) instead of
+    ``vmap`` over the stock optimizer.  Same ``AdamState`` structure either
+    way, so checkpoints don't care.
     """
+    if fused_adam:
+        from repro.optim.pop_adam import population_adam
+        _, _pop_apply = population_adam(3e-4)
 
     def update(state: SharedCriticState, batches, hypers=None):
         h = dict(DEFAULT_HYPERS)
@@ -117,10 +128,15 @@ def make_shared_critic_update(*, dvd_coef_fn=None, probe_size: int = 20,
             return loss
 
         aloss, agrads = jax.value_and_grad(pop_actor_loss)(state.policies)
-        aupd, policy_opt_new = jax.vmap(
-            lambda g, o: _opt_update(g, o, lr_override=h["actor_lr"])
-        )(agrads, state.policy_opt)
-        policies_new = apply_updates(state.policies, aupd)
+        if fused_adam:
+            policies_new, policy_opt_new = _pop_apply(
+                state.policies, agrads, state.policy_opt,
+                lr_override=h["actor_lr"])
+        else:
+            aupd, policy_opt_new = jax.vmap(
+                lambda g, o: _opt_update(g, o, lr_override=h["actor_lr"])
+            )(agrads, state.policy_opt)
+            policies_new = apply_updates(state.policies, aupd)
         # non-trainees keep their params/optimizer bit-identical
         gate = lambda new, old: jax.tree.map(
             lambda a, b: jnp.where(

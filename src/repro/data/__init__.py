@@ -1,5 +1,13 @@
+# The experience pipeline: one protocol (ExperienceOps), two storage
+# disciplines — the off-policy FIFO replay ring and the on-policy
+# fixed-length trajectory store with on-device GAE.
 from repro.data.replay_buffer import (  # noqa: F401
     ReplayBuffer, buffer_init, buffer_add, buffer_sample, buffer_can_sample,
+)
+from repro.data.experience import (  # noqa: F401
+    ExperienceOps, EXPERIENCE_KINDS, experience_ops,
+    TrajectoryBuffer, traj_init, traj_add, traj_full, traj_reset,
+    compute_gae, transition_spec, trajectory_spec, select_items,
 )
 from repro.data.prefetch import Prefetcher, DoubleBuffer  # noqa: F401
 from repro.data.lm_pipeline import synthetic_token_stream, host_batches  # noqa: F401

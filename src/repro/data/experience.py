@@ -1,0 +1,226 @@
+"""The experience-pipeline contract: one protocol, two storage disciplines.
+
+The paper's §4 protocol — compile the whole train iteration, vmap it over
+members — does not care *what* the iteration does with experience, only
+that the experience store is a pytree of device arrays so a population of
+stores is the same pytree with a leading member axis.  This module pins
+that contract down as :class:`ExperienceOps` and provides the repo's two
+implementations:
+
+  * ``replay``     — :mod:`repro.data.replay_buffer`'s FIFO ring (moved
+                     behind the protocol, numerics unchanged): off-policy
+                     learners (TD3/SAC/DQN) insert transitions and sample
+                     uniform batches forever.
+  * ``trajectory`` — :class:`TrajectoryBuffer` (this module): on-policy
+                     learners (PPO) store ONE fixed-length rollout per
+                     iteration — including the extras the acting policy
+                     emitted (``log_prob``, ``value``) — compute GAE on
+                     device, and consume the whole rollout as shuffled
+                     epoch/minibatches before it is overwritten.
+
+``repro.rollout.engine`` dispatches its fused train iteration on the
+*agent's* declared ``experience_kind`` (the :class:`repro.pop.Agent`
+contract); everything below the dispatch — init, add, export for elastic
+re-layout — goes through the ops bundle so the engine never hard-codes a
+buffer type again.
+
+Item specs
+----------
+``transition_spec(env_spec)`` is the replay item (what TD bootstrapping
+needs); ``trajectory_spec(env_spec, extras)`` is the on-policy item: the
+same transition plus ``truncated`` (GAE must cut the lambda chain at a
+time limit while still bootstrapping through it) plus one f32 scalar per
+policy extra.  Buffers store exactly the keys their spec declares —
+richer transition dicts (the collector emits ``truncated`` and extras
+unconditionally) are filtered down on ``add``.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.data.replay_buffer import (buffer_add, buffer_can_sample,
+                                      buffer_init)
+
+
+def transition_spec(spec):
+    """One replay-buffer item for an env spec (ShapeDtypeStructs)."""
+    f32 = jnp.float32
+    action = (jax.ShapeDtypeStruct((), jnp.int32) if spec.discrete
+              else jax.ShapeDtypeStruct((spec.act_dim,), f32))
+    return {"obs": jax.ShapeDtypeStruct((spec.obs_dim,), f32),
+            "action": action,
+            "reward": jax.ShapeDtypeStruct((), f32),
+            "next_obs": jax.ShapeDtypeStruct((spec.obs_dim,), f32),
+            "done": jax.ShapeDtypeStruct((), f32)}
+
+
+def trajectory_spec(spec, extras=("log_prob", "value")):
+    """One on-policy rollout step: the transition, the truncation flag
+    (episode end that must still bootstrap), and the policy extras."""
+    item = dict(transition_spec(spec))
+    item["truncated"] = jax.ShapeDtypeStruct((), jnp.float32)
+    for name in extras:
+        item[name] = jax.ShapeDtypeStruct((), jnp.float32)
+    return item
+
+
+def select_items(batch, spec):
+    """Filter a (possibly richer) transition dict down to a spec's keys —
+    the storage half of the "store what your spec declares" contract."""
+    return {k: batch[k] for k in spec}
+
+
+# ---------------------------------------------------------------------------
+# trajectory buffer: fixed-length on-policy rollouts
+# ---------------------------------------------------------------------------
+
+
+class TrajectoryBuffer(NamedTuple):
+    """A fixed-length rollout store for ONE member: leaves ``(T, E, ...)``
+    (time-major over ``num_envs`` parallel envs), plus the fill position.
+    A population of these is the same pytree with a leading member axis,
+    exactly like :class:`repro.data.ReplayBuffer`."""
+    data: Any              # pytree; leaves (num_steps, num_envs, ...)
+    pos: jnp.ndarray       # () int32 — steps filled so far
+
+
+def traj_init(num_steps: int, num_envs: int, item_spec) -> TrajectoryBuffer:
+    """``item_spec``: pytree of arrays/ShapeDtypeStructs (one step of one
+    env, e.g. :func:`trajectory_spec`)."""
+    data = jax.tree.map(
+        lambda x: jnp.zeros((num_steps, num_envs) + tuple(x.shape), x.dtype),
+        item_spec)
+    return TrajectoryBuffer(data=data, pos=jnp.zeros((), jnp.int32))
+
+
+def traj_add(buf: TrajectoryBuffer, steps) -> TrajectoryBuffer:
+    """Append ``t`` time-major steps (leaves ``(t, E, ...)``) at the fill
+    position.  Extra keys beyond the buffer's spec are dropped; adding past
+    capacity overwrites from the start (on-policy consumers drain the
+    buffer every iteration, so wrap-around is a caller bug the ``pos``
+    accounting makes visible)."""
+    if isinstance(buf.data, dict) and isinstance(steps, dict):
+        steps = select_items(steps, buf.data)
+    t = jax.tree.leaves(steps)[0].shape[0]
+    T = jax.tree.leaves(buf.data)[0].shape[0]
+    pos = buf.pos % T
+
+    def ins(store, items):
+        return jax.lax.dynamic_update_slice_in_dim(
+            store, items.astype(store.dtype), pos, axis=0)
+
+    return TrajectoryBuffer(data=jax.tree.map(ins, buf.data, steps),
+                            pos=buf.pos + t)
+
+
+def traj_full(buf: TrajectoryBuffer):
+    return buf.pos >= jax.tree.leaves(buf.data)[0].shape[0]
+
+
+def traj_reset(buf: TrajectoryBuffer) -> TrajectoryBuffer:
+    """Rewind the fill position (the data is dead; the next add overwrites).
+    On-policy iterations reset before every collect."""
+    return TrajectoryBuffer(data=buf.data, pos=jnp.zeros((), jnp.int32))
+
+
+# ---------------------------------------------------------------------------
+# GAE — on-device, vmappable over members
+# ---------------------------------------------------------------------------
+
+
+def compute_gae(reward, value, next_value, done, ep_end, discount, lam):
+    """Generalized Advantage Estimation over a time-major rollout.
+
+    All array args are ``(T, ...)`` (trailing env axes broadcast through);
+    ``discount`` / ``lam`` are scalars (per-member hypers under ``vmap``).
+
+        delta_t = r_t + discount * V(s'_t) * (1 - done_t) - V(s_t)
+        A_t     = delta_t + discount * lam * (1 - ep_end_t) * A_{t+1}
+
+    The two masks are deliberately different (the repo's truncation
+    contract, see ``repro.envs.core``): ``done`` is TERMINATION only, so a
+    time-limit step still bootstraps from ``next_value`` (the value of the
+    pre-reset terminal observation); ``ep_end`` is termination OR
+    truncation, so the lambda chain never leaks across an episode boundary
+    — the auto-reset means step t+1 belongs to a fresh episode.
+
+    Returns ``(advantages, returns)`` with ``returns = advantages + value``
+    (the lambda-return value target).
+    """
+    def body(carry, xs):
+        r, v, nv, d, e = xs
+        delta = r + discount * nv * (1.0 - d) - v
+        adv = delta + discount * lam * (1.0 - e) * carry
+        return adv, adv
+
+    _, adv = jax.lax.scan(body, jnp.zeros_like(reward[0]),
+                          (reward, value, next_value, done, ep_end),
+                          reverse=True)
+    return adv, adv + value
+
+
+# ---------------------------------------------------------------------------
+# the ops bundle (protocol instance per experience kind)
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class ExperienceOps:
+    """The uniform half of the experience contract — what the rollout
+    engine (and elastic re-layout) can do to ANY buffer without knowing its
+    kind.  The non-uniform half (how stored experience becomes update
+    batches: uniform replay sampling vs GAE + shuffled epoch/minibatches)
+    is exactly why ``repro.rollout.engine`` builds a different fused
+    iteration per kind.
+
+    ``init(env_spec, **cfg) -> buf`` builds ONE member's buffer (engines
+    vmap it); ``add(buf, items) -> buf`` stores one collect's output
+    (filtered to the spec — appended FIFO for replay, REPLACING the rollout
+    for trajectory, whose data lives exactly one iteration);
+    ``ready(buf, batch_size) -> bool`` gates updates (a replay ring must
+    hold a batch; a trajectory buffer must hold the full rollout).
+    """
+    kind: str
+    init: Callable
+    add: Callable
+    ready: Callable
+    item_spec: Callable
+
+
+def _replay_init(env_spec, *, capacity: int, **_):
+    return buffer_init(capacity, transition_spec(env_spec))
+
+
+def _trajectory_init(env_spec, *, num_steps: int, num_envs: int,
+                     extras=("log_prob", "value"), **_):
+    return traj_init(num_steps, num_envs, trajectory_spec(env_spec, extras))
+
+
+def _trajectory_store(buf, steps):
+    """One iteration's rollout replaces the last one (the previous data is
+    off-policy the moment the update ran); incremental filling is still
+    available via ``traj_add`` directly."""
+    return traj_add(traj_reset(buf), steps)
+
+
+EXPERIENCE_KINDS = {
+    "replay": ExperienceOps(kind="replay", init=_replay_init, add=buffer_add,
+                            ready=buffer_can_sample,
+                            item_spec=transition_spec),
+    "trajectory": ExperienceOps(kind="trajectory", init=_trajectory_init,
+                                add=_trajectory_store,
+                                ready=lambda buf, _=None: traj_full(buf),
+                                item_spec=trajectory_spec),
+}
+
+
+def experience_ops(kind: str) -> ExperienceOps:
+    ops = EXPERIENCE_KINDS.get(kind)
+    if ops is None:
+        raise ValueError(f"unknown experience kind {kind!r}; registered: "
+                         f"{sorted(EXPERIENCE_KINDS)}")
+    return ops

@@ -31,7 +31,14 @@ def buffer_init(capacity: int, sample_transition) -> ReplayBuffer:
 
 
 def buffer_add(buf: ReplayBuffer, batch) -> ReplayBuffer:
-    """Insert a batch (leading axis n) at the ring position (FIFO)."""
+    """Insert a batch (leading axis n) at the ring position (FIFO).
+
+    The buffer stores exactly the keys its init spec declared: a richer
+    transition dict (the collector also emits ``truncated`` and on-policy
+    extras — see ``repro.data.experience``) is filtered down, so one
+    collect path feeds every experience kind."""
+    if isinstance(buf.data, dict) and isinstance(batch, dict):
+        batch = {k: batch[k] for k in buf.data}
     n = jax.tree.leaves(batch)[0].shape[0]
     capacity = jax.tree.leaves(buf.data)[0].shape[0]
     idx = (buf.insert_pos + jnp.arange(n)) % capacity

@@ -83,12 +83,20 @@ class IslandLayout:
     test parametrization); ``.mesh`` materializes the jax mesh with axes
     ``("pop", "data", "model")``, built lazily and cached so repeated
     access returns the *same* Mesh object (jit caches key on it).
+
+    ``device_ids`` optionally pins the layout to an EXPLICIT device
+    sequence (jax device ids, in mesh order) — the heterogeneous-host
+    case, where "the first ``devices`` devices" is the wrong subset or the
+    wrong order (e.g. islands must line up with NUMA/interconnect
+    locality).  Still pure math until ``.mesh``: ids are just integers
+    here, resolved against ``jax.devices()`` only when the mesh is built.
     """
     devices: int
     islands: int
     data: int
     model: int
     population: int
+    device_ids: tuple = None
 
     def __post_init__(self):
         if self.islands * self.data * self.model != self.devices:
@@ -97,6 +105,15 @@ class IslandLayout:
             raise ValueError(
                 f"population={self.population} does not split into "
                 f"{self.islands} whole islands")
+        if self.device_ids is not None:
+            ids = tuple(int(d) for d in self.device_ids)
+            if len(ids) != self.devices:
+                raise ValueError(
+                    f"{len(ids)} explicit device ids for a layout of "
+                    f"{self.devices} devices")
+            if len(set(ids)) != len(ids):
+                raise ValueError(f"duplicate device ids in {ids}")
+            object.__setattr__(self, "device_ids", ids)
 
     @property
     def members_per_island(self) -> int:
@@ -141,6 +158,17 @@ def _build_mesh(layout: IslandLayout):
             f"--devices)")
     shape = (layout.islands, layout.data, layout.model)
     axes = ("pop", "data", "model")
+    if layout.device_ids is not None:
+        # explicit placement (heterogeneous hosts): resolve ids in the
+        # caller's order — islands follow the sequence, not enumeration
+        by_id = {d.id: d for d in jax.devices()}
+        missing = [i for i in layout.device_ids if i not in by_id]
+        if missing:
+            raise ValueError(
+                f"explicit device ids {missing} not present in this "
+                f"process (available: {sorted(by_id)})")
+        devs = np.asarray([by_id[i] for i in layout.device_ids])
+        return Mesh(devs.reshape(shape), axes)
     if layout.devices == available:
         return compat.make_mesh(shape, axes)
     # a layout over a device subset (--devices, or planning for survivors):
@@ -150,7 +178,7 @@ def _build_mesh(layout: IslandLayout):
 
 
 def plan_layout(num_devices: int, population: int, *,
-                preferred_model: int = 1) -> IslandLayout:
+                preferred_model: int = 1, devices=None) -> IslandLayout:
     """Choose the island decomposition for ``num_devices`` accelerators and
     a population of ``population`` members.
 
@@ -160,7 +188,21 @@ def plan_layout(num_devices: int, population: int, *,
     remainder on the data axis inside each island.  ``preferred_model > 1``
     reserves a model-parallel grid per member first (large-member
     populations), falling back with a warning exactly like ``plan_mesh``.
+
+    ``devices`` optionally pins the layout to an explicit device sequence
+    (jax ``Device`` objects or integer ids, in mesh order) for
+    heterogeneous hosts; it overrides ``num_devices`` (pass 0) and the
+    default "first N devices" selection.
     """
+    device_ids = None
+    if devices is not None:
+        device_ids = tuple(d.id if hasattr(d, "id") else int(d)
+                           for d in devices)
+        if num_devices and num_devices != len(device_ids):
+            raise ValueError(
+                f"num_devices={num_devices} disagrees with the "
+                f"{len(device_ids)} explicit devices")
+        num_devices = len(device_ids)
     if num_devices < 1:
         raise ValueError(f"num_devices must be >= 1, got {num_devices}")
     if population < 1:
@@ -175,4 +217,5 @@ def plan_layout(num_devices: int, population: int, *,
     islands = math.gcd(population, remaining)
     data = remaining // islands
     return IslandLayout(devices=num_devices, islands=islands, data=data,
-                        model=model, population=population)
+                        model=model, population=population,
+                        device_ids=device_ids)

@@ -7,7 +7,9 @@ fuses the whole thing over flattened member parameters with the
 PER-MEMBER learning rate (the vmapped-hyperparameter protocol) read from
 SMEM, one grid row per (member, block).
 
-Layout: params/grads/mu/nu (N, P) fp32, lr (N,), step scalar.
+Layout: params/grads/mu/nu (N, P) fp32, lr (N,), step (N,) — the step is
+per member because gated update schemes (CEM-RL's train_frac, TD3's
+delayed actor) legitimately let members' optimizer clocks diverge.
 """
 from __future__ import annotations
 
@@ -37,23 +39,26 @@ def _kernel(step_ref, lr_ref, p_ref, g_ref, mu_ref, nu_ref,
 def pop_adam(params, grads, mu, nu, lr, step, *, b1: float = 0.9,
              b2: float = 0.999, eps: float = 1e-8, block: int = 4096,
              interpret: bool = False):
-    """params/grads/mu/nu: (N, P); lr: (N,); step: () int32 (1-based).
+    """params/grads/mu/nu: (N, P); lr: (N,); step: () or (N,) int32
+    (1-based; a scalar broadcasts to every member).
 
     Returns (new_params, new_mu, new_nu)."""
     n, p = params.shape
     block = min(block, p)
     assert p % block == 0, (p, block)
+    step = jnp.broadcast_to(step, (n,))
     kern = functools.partial(_kernel, b1=b1, b2=b2, eps=eps)
     row = pl.BlockSpec((1, block), lambda i, j: (i, j))
+    member = pl.BlockSpec((1,), lambda i, j: (i,))
     out = pl.pallas_call(
         kern,
         grid=(n, p // block),
-        in_specs=[pl.BlockSpec((1,), lambda i, j: (0,)),       # step
-                  pl.BlockSpec((1,), lambda i, j: (i,)),       # lr
+        in_specs=[member,                                      # step
+                  member,                                      # lr
                   row, row, row, row],
         out_specs=[row, row, row],
         out_shape=[jax.ShapeDtypeStruct((n, p), jnp.float32)] * 3,
         interpret=interpret,
-    )(step.reshape(1).astype(jnp.int32), lr.astype(jnp.float32),
+    )(step.astype(jnp.int32), lr.astype(jnp.float32),
       params, grads, mu, nu)
     return tuple(out)

@@ -10,12 +10,13 @@ from repro.nn.mamba2 import ssd_scan
 
 def pop_adam_ref(params, grads, mu, nu, lr, step, *, b1=0.9, b2=0.999,
                  eps=1e-8):
-    """(N,P) batched Adam with per-member lr; step is 1-based."""
+    """(N,P) batched Adam with per-member lr; step is 1-based, () or (N,)."""
     g = grads.astype(jnp.float32)
     mu2 = b1 * mu + (1 - b1) * g
     nu2 = b2 * nu + (1 - b2) * g * g
-    stepf = step.astype(jnp.float32)
-    c1, c2 = 1 - b1 ** stepf, 1 - b2 ** stepf
+    stepf = jnp.broadcast_to(step, (params.shape[0],)).astype(jnp.float32)
+    c1 = (1 - b1 ** stepf)[:, None]
+    c2 = (1 - b2 ** stepf)[:, None]
     upd = lr[:, None] * (mu2 / c1) / (jnp.sqrt(nu2 / c2) + eps)
     return params - upd, mu2, nu2
 

@@ -1,4 +1,16 @@
-"""End-to-end training driver: ``python -m repro.launch.train --arch <id>``.
+"""End-to-end training driver.
+
+Two workloads behind one CLI and ONE ``PopTrainer`` code path:
+
+  * ``--arch <id>``   — LM population training on the synthetic token
+                        pipeline (the paper's §5.3-style study);
+  * ``--algo <name>`` — RL population training on a pure-JAX env via the
+                        fused ``repro.rollout`` iteration.  Algorithm
+                        selection is the ``repro.rl.ALGOS`` *registry*
+                        (td3 | sac | dqn | ppo — off- and on-policy through
+                        the same experience-pipeline contract), so unknown
+                        names are rejected with the valid set and adding an
+                        algorithm never touches this file.
 
 Production features exercised here (scaled down to whatever devices exist):
   * config-driven arch selection (--arch) + population size (--population)
@@ -36,9 +48,87 @@ from repro.data import host_batches
 from repro.pop import LMAgent, PopTrainer
 
 
+def _run_rl(args):
+    """RL branch: registry-selected algorithm on a pure-JAX env, trained
+    through ``PopTrainer.attach_rollout`` / ``run_env_loop`` (the fused
+    iteration — off-policy or on-policy per the agent's experience kind)."""
+    from repro.envs import make
+    from repro.rl import get_algo, make_agent
+
+    algo = get_algo(args.algo)   # ValueError lists the registry on typos
+    env = make(args.env)
+    agent = make_agent(args.algo, env.spec)
+    n = args.population
+    print(f"[train] algo={algo.name} env={args.env} pop={n} "
+          f"strategy={args.strategy} backend={args.backend} "
+          f"experience={algo.experience_kind}")
+
+    pcfg = PopulationConfig(
+        size=n, strategy=args.strategy, backend=args.backend,
+        num_steps=args.updates_per_iter, pbt_interval=args.pbt_interval,
+        hyper_space=algo.hyper_space, donate=False)  # async ckpts read state
+    layout = None
+    if args.backend == "islands":
+        from repro.elastic import plan_layout
+        layout = plan_layout(args.devices or len(jax.devices()), n)
+        print(f"[train] {layout}")
+    trainer = PopTrainer(agent, pcfg, seed=args.seed, layout=layout,
+                         checkpoint_dir=args.ckpt_dir)
+    trainer.attach_rollout(env, num_envs=args.num_envs,
+                           collect_steps=args.collect_steps,
+                           batch_size=args.batch, epochs=args.epochs)
+    if args.resume == "auto":
+        meta = trainer._mgr.peek_extra()
+        if (args.resize == "auto" and meta is not None
+                and meta.get("size", n) != n):
+            from repro.elastic import restore_elastic
+            resumed, lineage = restore_elastic(trainer)
+            print(f"[train] elastic resume from step {resumed}: population "
+                  f"{meta['size']} -> {n}, lineage={np.asarray(lineage)}")
+        elif trainer.resume() is not None:
+            print(f"[train] resumed at trainer step {trainer.step_count}")
+
+    t0 = time.time()
+    best = {"fitness": float("-inf")}
+
+    def on_iter(it, metrics, stats, fitness, lineage):
+        if fitness is not None:
+            best["fitness"] = max(best["fitness"], float(np.max(fitness)))
+        if lineage is not None:
+            print(f"[evolve] iter {it + 1} "
+                  f"fitness={np.asarray(trainer.last_fitness).round(2)} "
+                  f"parents={np.asarray(lineage)}")
+        if (it + 1) % args.ckpt_every == 0 or it == args.steps - 1:
+            trainer.save()
+        if it % 10 == 0 or it == args.steps - 1:
+            ret = float(np.asarray(stats["mean_return"]).mean())
+            print(f"[train] iter {it} mean_return {ret:+.2f} "
+                  f"({time.time() - t0:.1f}s)", flush=True)
+
+    trainer.run_env_loop(args.steps, eval_every=args.eval_every,
+                         on_iter=on_iter)
+    trainer.wait()
+    print(f"[train] done in {time.time() - t0:.1f}s, "
+          f"best fitness {best['fitness']:+.2f}")
+    return best["fitness"]
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
+    ap.add_argument("--arch", default=None,
+                    help="LM config id (LM workload; exclusive with --algo)")
+    ap.add_argument("--algo", default=None,
+                    help="RL algorithm from the repro.rl.ALGOS registry "
+                    "(td3|sac|dqn|ppo; exclusive with --arch)")
+    ap.add_argument("--env", default="pendulum",
+                    help="pure-JAX env name for the --algo workload")
+    ap.add_argument("--num-envs", type=int, default=8)
+    ap.add_argument("--collect-steps", type=int, default=32)
+    ap.add_argument("--updates-per-iter", type=int, default=32,
+                    help="chained off-policy updates per fused iteration")
+    ap.add_argument("--epochs", type=int, default=4,
+                    help="on-policy (ppo) epochs per fused iteration")
+    ap.add_argument("--eval-every", type=int, default=2)
     ap.add_argument("--steps", type=int, default=200)
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--seq-len", type=int, default=128)
@@ -64,6 +154,11 @@ def main(argv=None):
     ap.add_argument("--lr", type=float, default=3e-4)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
+
+    if (args.arch is None) == (args.algo is None):
+        ap.error("pass exactly one of --arch (LM) or --algo (RL)")
+    if args.algo is not None:
+        return _run_rl(args)
 
     cfg = get_config(args.arch)
     if args.smoke:

@@ -1,0 +1,117 @@
+"""Population-level Adam: the ``kernels/pop_adam`` Pallas kernel as an
+optimizer.
+
+The stock path applies :func:`repro.optim.adam` per member under ``vmap``,
+which leaves XLA to emit one elementwise chain per pytree leaf per member.
+This module exposes the alternative the kernel was written for: flatten the
+population's parameters to ONE ``(N, P)`` matrix and update every member's
+Adam state in a single fused pass, with the per-member learning rate (the
+paper's vmapped-hyperparameter protocol) read per grid row.
+
+Opt-in and TPU-gated: ``fused=None`` ("auto") lowers the Pallas kernel only
+on TPU backends and otherwise falls back to a pure-jnp pass over the same
+flattened layout — the fallback computes the exact expressions of the stock
+optimizer, so numerics are identical wherever the flag is flipped
+(``tests/test_experience_ppo.py`` pins this).  ``fused=True`` forces the
+kernel (interpret mode off-TPU — CPU validation only).
+
+State compatibility: ``init_fn`` produces the same ``AdamState`` structure
+as ``jax.vmap(stock_init)`` (step ``(N,)``, mu/nu stacked trees), so
+checkpoints, elastic resize and the gated-update bookkeeping in
+``repro.core.shared`` are oblivious to which path is active.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.optimizers import AdamState
+
+
+def _flatten(tree):
+    """Stacked tree (leaves (N, ...)) -> ((N, P) f32, rebuild fn)."""
+    leaves, treedef = jax.tree.flatten(tree)
+    n = leaves[0].shape[0]
+    sizes = [math.prod(l.shape[1:]) for l in leaves]
+    flat = jnp.concatenate(
+        [l.reshape(n, -1).astype(jnp.float32) for l in leaves], axis=1)
+
+    def rebuild(mat, like=None):
+        outs, off = [], 0
+        ref = leaves if like is None else jax.tree.leaves(like)
+        for leaf, size in zip(ref, sizes):
+            outs.append(mat[:, off:off + size]
+                        .reshape(leaf.shape).astype(leaf.dtype))
+            off += size
+        return jax.tree.unflatten(treedef, outs)
+
+    return flat, rebuild
+
+
+def _use_kernel(fused) -> bool:
+    if fused is None:
+        return jax.default_backend() == "tpu"
+    return bool(fused)
+
+
+def population_adam(lr: float = 3e-4, b1: float = 0.9, b2: float = 0.999,
+                    eps: float = 1e-8, block: int = 4096, fused=None):
+    """Build ``(init_fn, apply_fn)`` over population-stacked pytrees.
+
+        state = init_fn(stacked_params)            # leaves (N, ...)
+        params, state = apply_fn(params, grads, state, lr_override=...)
+
+    ``lr_override`` may be a scalar or an ``(N,)`` per-member vector.
+    Unlike the stock pair this applies the update internally (the kernel
+    fuses moment update + bias correction + apply in one pass).
+    """
+    kernel = _use_kernel(fused)
+
+    def init_fn(params):
+        n = jax.tree.leaves(params)[0].shape[0]
+        zeros = lambda: jax.tree.map(
+            lambda p: jnp.zeros_like(p, jnp.float32), params)
+        return AdamState(step=jnp.zeros((n,), jnp.int32),
+                         mu=zeros(), nu=zeros())
+
+    def apply_fn(params, grads, state, lr_override=None):
+        n = jax.tree.leaves(params)[0].shape[0]
+        lr_t = lr if lr_override is None else lr_override
+        lr_vec = jnp.broadcast_to(jnp.asarray(lr_t, jnp.float32), (n,))
+        step = state.step + 1
+
+        pf, rebuild = _flatten(params)
+        gf, _ = _flatten(grads)
+        mf, _ = _flatten(state.mu)
+        nf, _ = _flatten(state.nu)
+
+        if kernel:
+            from repro.kernels.pop_adam import pop_adam as _pa
+            p = pf.shape[1]
+            blk = min(block, p)
+            pad = (-p) % blk
+            if pad:
+                z = jnp.zeros((n, pad), jnp.float32)
+                pf, gf, mf, nf = (jnp.concatenate([x, z], axis=1)
+                                  for x in (pf, gf, mf, nf))
+            p2, m2, v2 = _pa(pf, gf, mf, nf, lr_vec, step, b1=b1, b2=b2,
+                             eps=eps, block=blk,
+                             interpret=jax.default_backend() != "tpu")
+            if pad:
+                p2, m2, v2 = (x[:, :p] for x in (p2, m2, v2))
+        else:
+            # the stock optimizer's expressions on the flattened layout —
+            # elementwise, so bitwise-identical to vmap(stock adam)
+            m2 = b1 * mf + (1 - b1) * gf
+            v2 = b2 * nf + (1 - b2) * gf * gf
+            stepf = step.astype(jnp.float32)[:, None]
+            c1, c2 = 1 - b1 ** stepf, 1 - b2 ** stepf
+            p2 = pf - lr_vec[:, None] * (m2 / c1) / (jnp.sqrt(v2 / c2) + eps)
+
+        new_state = AdamState(step=step, mu=rebuild(m2, state.mu),
+                              nu=rebuild(v2, state.nu))
+        return rebuild(p2), new_state
+
+    return init_fn, apply_fn

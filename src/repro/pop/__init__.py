@@ -2,7 +2,7 @@
 # single-agent training is population training with size=1, and every
 # evolution strategy / update backend is a config string, not a call site.
 from repro.pop.agent import (  # noqa: F401
-    Agent, ModuleAgent, LMAgent, SharedCriticAgent,
+    Agent, ModuleAgent, PPOAgent, LMAgent, SharedCriticAgent,
 )
 from repro.pop.strategy import (  # noqa: F401
     EvolutionStrategy, NoEvolution, PBT, CEM, DvD,

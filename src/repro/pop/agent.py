@@ -4,10 +4,13 @@ The paper's protocol (§4.1) only needs a functional single-agent triple
 ``init / update / policy``; everything population-shaped (stacking, vmapping,
 hyperparameter injection, exploit/explore) is generic machinery layered on
 top.  This module pins that contract down and provides adapters for the
-three learner families in the repo:
+learner families in the repo:
 
   * ``ModuleAgent``       — the functional RL modules (td3 / sac / dqn):
                             per-member state, per-member update.
+  * ``PPOAgent``          — the on-policy module (ppo): a ModuleAgent that
+                            declares ``experience_kind = "trajectory"`` and
+                            exposes the value head the GAE pipeline needs.
   * ``LMAgent``           — the language-model train step: state is
                             (params, opt_state, step), fitness is -loss.
   * ``SharedCriticAgent`` — the §4.2 family (CEM-RL / DvD): ONE critic
@@ -29,15 +32,29 @@ from repro.core.population import population_init
 
 @runtime_checkable
 class Agent(Protocol):
-    """Contract consumed by ``repro.pop`` backends and ``PopTrainer``.
+    """Contract consumed by ``repro.pop`` backends, ``PopTrainer`` and the
+    ``repro.rollout`` engine.
 
     ``population_level`` distinguishes the two update shapes:
       False — ``update(state, batch, hypers)`` is a SINGLE-member step; the
               backend vmaps / loops it over the stacked population.
       True  — ``update`` already consumes the whole stacked population
               (shared-critic family); the backend jits it directly.
+
+    ``experience_kind`` declares what ``batch`` IS (the
+    ``repro.data.experience`` protocol) and thereby which fused train
+    iteration the rollout engine builds:
+      "replay"     — transitions sampled from a FIFO ring (td3/sac/dqn);
+      "trajectory" — GAE-processed on-policy minibatches with the extras
+                     the acting policy emitted (ppo).  Trajectory agents
+                     must additionally expose ``value(actor_params, obs)``
+                     (the state-value head GAE bootstraps from) and their
+                     ``default_hypers`` provide the ``discount`` /
+                     ``gae_lambda`` fallbacks for members that don't tune
+                     them.
     """
     population_level: bool
+    experience_kind: str
 
     def population_init(self, key, n: int): ...
     def update(self, state, batch, hypers=None): ...
@@ -49,11 +66,19 @@ class Agent(Protocol):
 class AgentBase:
     """Default implementations shared by the adapters."""
     population_level = False
+    experience_kind = "replay"
 
     # The functional RL module whose ``policy`` drives acting-time
     # exploration (``repro.rollout`` builds the exploration policy from its
-    # DEFAULT_HYPERS); None means the agent only offers ``policy`` itself.
+    # DEFAULT_HYPERS / ``explore``); None means the agent only offers
+    # ``policy`` itself.
     exploration_module = None
+
+    @property
+    def default_hypers(self) -> dict:
+        """Static fallbacks for per-member dynamic hyperparameters (the
+        experience pipeline reads ``discount`` / ``gae_lambda`` here)."""
+        return {}
 
     def population_init(self, key, n: int):
         return population_init(self.init, key, n)
@@ -92,6 +117,10 @@ class ModuleAgent(AgentBase):
         self.init_kwargs = init_kwargs
         self._actor_field = actor_field
 
+    @property
+    def default_hypers(self) -> dict:
+        return dict(getattr(self.module, "DEFAULT_HYPERS", {}))
+
     def init(self, key):
         return self.module.init(key, self.obs_dim, self.act_dim,
                                 **self.init_kwargs)
@@ -117,6 +146,33 @@ class ModuleAgent(AgentBase):
         if hasattr(pop_state, target):
             repl[target] = jax.tree.map(jnp.copy, new_params)
         return pop_state._replace(**repl)
+
+
+class PPOAgent(ModuleAgent):
+    """Adapter for ``repro.rl.ppo`` — the repo's on-policy (trajectory)
+    agent.
+
+    Same ``init/update/policy`` triple as the other module adapters, so it
+    plugs into every vectorized/sequential/islands backend and PBT/CEM
+    strategy unchanged; what differs is declared, not special-cased:
+    ``experience_kind = "trajectory"`` makes the rollout engine collect
+    fixed-length rollouts with the policy's log_prob/value extras, run GAE
+    on device, and feed shuffled epoch/minibatches to ``update``.  The
+    PBT-tunable per-member hypers are ``lr`` / ``clip_eps`` /
+    ``entropy_coef`` (plus ``discount`` / ``gae_lambda`` on the GAE side).
+    """
+    experience_kind = "trajectory"
+
+    def __init__(self, obs_dim: int, act_dim: int, *, discrete: bool = False,
+                 **init_kwargs):
+        from repro.rl import ppo
+        super().__init__(ppo, obs_dim, act_dim, actor_field="params",
+                         discrete=discrete, **init_kwargs)
+
+    def value(self, actor_params, obs):
+        """The state-value head GAE bootstraps from (``V(next_obs)`` of
+        every stored step, evaluated inside the fused iteration)."""
+        return self.module.value(actor_params, obs)
 
 
 class LMState(NamedTuple):
@@ -174,7 +230,8 @@ class SharedCriticAgent(AgentBase):
     population_level = True
 
     def __init__(self, obs_dim: int, act_dim: int, *, dvd_coef_fn=None,
-                 probe_size: int = 20, train_frac: float = 1.0):
+                 probe_size: int = 20, train_frac: float = 1.0,
+                 fused_adam: bool = False):
         from repro.core import shared
         from repro.rl import td3
         self._shared = shared
@@ -184,6 +241,9 @@ class SharedCriticAgent(AgentBase):
         self.dvd_coef_fn = dvd_coef_fn
         self.probe_size = probe_size
         self.train_frac = train_frac
+        # opt-in kernels/pop_adam policy step; PopTrainer flips this on
+        # when the PopulationConfig says fused_adam=True
+        self.fused_adam = fused_adam
 
     def population_init(self, key, n: int):
         return self._shared.init(key, self.obs_dim, self.act_dim, n)
@@ -195,7 +255,7 @@ class SharedCriticAgent(AgentBase):
             return self._shared.sequential_shared_critic_update()
         return self._shared.make_shared_critic_update(
             dvd_coef_fn=self.dvd_coef_fn, probe_size=self.probe_size,
-            train_frac=self.train_frac)
+            train_frac=self.train_frac, fused_adam=self.fused_adam)
 
     def update(self, state, batch, hypers=None):
         raise TypeError("SharedCriticAgent is population_level; backends "

@@ -54,6 +54,11 @@ class PopTrainer:
 
         self.key, k_init, k_bind, k_hyp = jax.random.split(self.key, 4)
         self.state = agent.population_init(k_init, self.n)
+        if pcfg.fused_adam and hasattr(agent, "fused_adam"):
+            # opt-in kernels/pop_adam path for agents with a population-
+            # level optimizer step (the shared-critic family); per-member
+            # agents ignore the flag (their optimizer runs under vmap)
+            agent.fused_adam = True
         self.strategy.configure_agent(agent)
         self.state = self.strategy.bind(k_bind, agent, self.state)
         self.hypers = self.strategy.init_hypers(k_hyp, self.n)
@@ -120,10 +125,13 @@ class PopTrainer:
     # ----------------------------------------------------------- env loop
     def attach_rollout(self, env, **engine_kwargs):
         """Attach a ``repro.rollout`` acting engine: per-member batched envs
-        (``num_envs``), a population of device-resident replay buffers, a
-        deterministic evaluator, and the fused collect->insert->sample->
-        update iteration (``pcfg.num_steps`` chained updates per call,
-        ``pcfg.backend`` update implementation).  Returns the engine."""
+        (``num_envs``), a population of device-resident experience buffers,
+        a deterministic evaluator, and the fused train iteration — shaped
+        by the agent's ``experience_kind``: collect->insert->sample->
+        ``pcfg.num_steps`` chained updates for replay agents, collect->
+        GAE->``epochs`` x shuffled minibatches for trajectory (ppo) agents;
+        ``pcfg.backend`` picks the update implementation either way.
+        Returns the engine."""
         from repro.rollout.engine import RolloutEngine
         if self._mgr is not None and self.pcfg.donate:
             raise ValueError(
@@ -171,6 +179,8 @@ class PopTrainer:
         Algorithm-1 ordering (train -> evaluate -> refit) falls out of
         ``pbt_interval=1``.  ``on_iter(it, metrics, stats, fitness,
         lineage)`` is the logging hook.  Returns the last (metrics, stats).
+        (On-policy engines update from the first iteration — did_update is
+        always True; replay engines warm up until buffers can sample.)
         """
         metrics = stats = None
         for it in range(iters):

@@ -1,1 +1,4 @@
-from repro.rl import td3, sac, dqn  # noqa: F401
+from repro.rl import td3, sac, dqn, ppo  # noqa: F401
+from repro.rl.registry import (  # noqa: F401
+    ALGOS, AlgoSpec, get_algo, make_agent,
+)

@@ -44,6 +44,42 @@ def sample_squashed(key, mean, log_std):
     return act, logp
 
 
+def logits_init(key, obs_dim: int, num_actions: int, hidden=HIDDEN):
+    """Categorical-policy head (raw logits; apply with ``mlp_apply``)."""
+    return mlp_init(key, [obs_dim, *hidden, num_actions])
+
+
+def value_init(key, obs_dim: int, hidden=HIDDEN):
+    """State-value head V(s) (PPO's critic — no action input)."""
+    return mlp_init(key, [obs_dim, *hidden, 1])
+
+
+def value_apply(params, obs):
+    return mlp_apply(params, obs)[..., 0]
+
+
+def gaussian_log_prob(mean, log_std, actions):
+    """Diagonal-gaussian log-density of ``actions`` (sum over act dims)."""
+    var = jnp.exp(2.0 * log_std)
+    return jnp.sum(-0.5 * ((actions - mean) ** 2 / var + 2.0 * log_std
+                           + jnp.log(2.0 * jnp.pi)), axis=-1)
+
+
+def gaussian_entropy(log_std):
+    return jnp.sum(log_std + 0.5 * jnp.log(2.0 * jnp.pi * jnp.e), axis=-1)
+
+
+def categorical_log_prob(logits, actions):
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return jnp.take_along_axis(
+        logp, actions[..., None].astype(jnp.int32), axis=-1)[..., 0]
+
+
+def categorical_entropy(logits):
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.sum(jnp.exp(logp) * logp, axis=-1)
+
+
 def critic_init(key, obs_dim: int, act_dim: int, hidden=HIDDEN):
     k1, k2 = jax.random.split(key)
     return {"q1": mlp_init(k1, [obs_dim + act_dim, *hidden, 1]),

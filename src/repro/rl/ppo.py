@@ -1,0 +1,145 @@
+"""PPO (Schulman et al., 2017) — functional, population-vectorizable.
+
+The on-policy member of the repo's algorithm family: the clipped surrogate
+objective with value clipping and an entropy bonus, over minibatches of a
+fixed-length GAE-processed rollout (``repro.data.TrajectoryBuffer``).  Like
+td3/sac/dqn, every hyperparameter a PBT study would tune is a *dynamic*
+input (the ``hypers`` dict) so one compiled update serves all members with
+their own values under ``vmap``:
+
+    lr, clip_eps, entropy_coef, value_coef, discount, gae_lambda.
+
+(``discount`` / ``gae_lambda`` are consumed on the GAE side of the
+pipeline — ``repro.rollout.engine`` reads them from the same per-member
+dict when it computes advantages on device.)
+
+Acting contract: PPO is the repo's first algorithm whose policy emits
+*extras* — ``explore`` returns ``(action, {"log_prob", "value"})`` and the
+generalized ``repro.rollout.Collector`` records them into the trajectory,
+because the update must evaluate the ratio against the log-prob of the
+distribution that actually sampled the action.  Continuous actions are an
+unsquashed diagonal gaussian around a tanh mean with a learnable
+state-independent ``log_std`` (the env clips at its boundary; the stored
+action stays the raw sample so the stored log-prob stays exact); discrete
+actions are a categorical over logits.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim import adam, apply_updates
+from repro.rl import networks as nets
+
+
+DEFAULT_HYPERS = {
+    "lr": 3e-4, "clip_eps": 0.2, "entropy_coef": 0.01, "value_coef": 0.5,
+    "discount": 0.99, "gae_lambda": 0.95,
+}
+LOG_STD_INIT = -0.5
+
+_opt_init, _opt_update = adam(3e-4)
+
+
+class PPOState(NamedTuple):
+    params: Any            # {"actor", "critic"} (+ "log_std" if continuous)
+    opt: Any
+    step: jnp.ndarray
+
+
+def init(key, obs_dim: int, act_dim: int, discrete: bool = False,
+         hidden=nets.HIDDEN) -> PPOState:
+    ka, kc = jax.random.split(key)
+    actor = (nets.logits_init(ka, obs_dim, act_dim, hidden=hidden) if discrete
+             else nets.actor_init(ka, obs_dim, act_dim, hidden=hidden))
+    params = {"actor": actor,
+              "critic": nets.value_init(kc, obs_dim, hidden=hidden)}
+    if not discrete:
+        params["log_std"] = jnp.full((act_dim,), LOG_STD_INIT)
+    return PPOState(params=params, opt=_opt_init(params),
+                    step=jnp.zeros((), jnp.int32))
+
+
+def _dist(params, obs):
+    """(mean, log_std) for continuous params, (logits, None) for discrete."""
+    if "log_std" in params:
+        return nets.actor_apply(params["actor"], obs), params["log_std"]
+    return nets.mlp_apply(params["actor"], obs), None
+
+
+def policy(params, obs, key=None):
+    """Deterministic action when ``key`` is None (evaluation), else a
+    sample from the acting distribution."""
+    out, log_std = _dist(params, obs)
+    if log_std is None:
+        if key is None:
+            return jnp.argmax(out, axis=-1)
+        return jax.random.categorical(key, out, axis=-1)
+    if key is None:
+        return out
+    return out + jnp.exp(log_std) * jax.random.normal(key, out.shape)
+
+
+def explore(params, obs, key, hypers=None):
+    """The acting step: ``(action, extras)`` with the log-prob of the
+    sampled action and the state value — the on-policy extras the
+    generalized collector stores (``repro.data.trajectory_spec``)."""
+    action = policy(params, obs, key)
+    logp, _ = log_prob_entropy(params, obs, action)
+    return action, {"log_prob": logp, "value": value(params, obs)}
+
+
+def value(params, obs):
+    return nets.value_apply(params["critic"], obs)
+
+
+def log_prob_entropy(params, obs, actions):
+    out, log_std = _dist(params, obs)
+    if log_std is None:
+        return (nets.categorical_log_prob(out, actions),
+                nets.categorical_entropy(out))
+    return (nets.gaussian_log_prob(out, log_std, actions),
+            jnp.broadcast_to(nets.gaussian_entropy(log_std),
+                             out.shape[:-1]))
+
+
+def update(state: PPOState, batch, hypers=None) -> tuple[PPOState, dict]:
+    """One clipped-surrogate step on a minibatch of GAE-processed rollout
+    data: ``batch`` holds obs, action, log_prob, value (both as collected),
+    advantage and return (``repro.rollout.engine`` builds them on device).
+
+    Advantages are normalized per minibatch (the standard PPO detail); the
+    value loss is clipped around the collected value with the same
+    ``clip_eps`` as the ratio."""
+    h = dict(DEFAULT_HYPERS)
+    if hypers:
+        h.update(hypers)
+
+    adv = batch["advantage"]
+    adv = (adv - jnp.mean(adv)) / (jnp.std(adv) + 1e-8)
+
+    def loss_fn(params):
+        logp, entropy = log_prob_entropy(params, batch["obs"],
+                                         batch["action"])
+        ratio = jnp.exp(logp - batch["log_prob"])
+        clipped = jnp.clip(ratio, 1.0 - h["clip_eps"], 1.0 + h["clip_eps"])
+        pg_loss = -jnp.mean(jnp.minimum(ratio * adv, clipped * adv))
+
+        v = value(params, batch["obs"])
+        v_clip = batch["value"] + jnp.clip(v - batch["value"],
+                                           -h["clip_eps"], h["clip_eps"])
+        v_loss = 0.5 * jnp.mean(jnp.maximum((v - batch["return"]) ** 2,
+                                            (v_clip - batch["return"]) ** 2))
+        ent = jnp.mean(entropy)
+        loss = pg_loss + h["value_coef"] * v_loss - h["entropy_coef"] * ent
+        kl = jnp.mean(batch["log_prob"] - logp)
+        return loss, {"policy_loss": pg_loss, "value_loss": v_loss,
+                      "entropy": ent, "approx_kl": kl}
+
+    (_, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+        state.params)
+    upd, opt = _opt_update(grads, state.opt, lr_override=h["lr"])
+    params = apply_updates(state.params, upd)
+    return PPOState(params=params, opt=opt, step=state.step + 1), metrics

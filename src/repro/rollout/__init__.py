@@ -1,11 +1,13 @@
 # On-device acting engine: batched envs, population-vectorized collection,
-# deterministic evaluation, and the fused collect->insert->sample->update
-# train iteration (the acting-side half of the paper, alongside repro.pop).
+# deterministic evaluation, and the fused train iteration — off-policy
+# (collect->insert->sample->update) or on-policy (collect->GAE->epoch/
+# minibatch scan), dispatched on the agent's experience kind (the acting-
+# side half of the paper, alongside repro.pop and repro.data.experience).
 from repro.rollout.vecenv import (  # noqa: F401
     VecEnv, VecEnvState, episode_stats, reset_stats,
 )
 from repro.rollout.collector import (  # noqa: F401
-    Collector, exploration_policy, default_exploration,
+    Collector, exploration_policy, default_exploration, split_actions,
 )
 from repro.rollout.evaluator import Evaluator  # noqa: F401
 from repro.rollout.engine import RolloutEngine, transition_spec  # noqa: F401

@@ -3,17 +3,23 @@
 A ``lax.scan`` over ``num_steps`` acting steps, vmapped over the population:
 each member drives its own ``num_envs`` environments with its own
 exploration policy, whose noise scale comes from that member's dynamic
-hyperparameters (the same dict the update step consumes).  Trajectories come
-back flattened to ``(N, num_steps * num_envs, ...)`` so
+hyperparameters (the same dict the update step consumes).  By default
+trajectories come back flattened to ``(N, num_steps * num_envs, ...)`` so
 ``vmap(buffer_add)`` inserts them straight into the population of
-device-resident replay buffers.
+device-resident replay buffers; ``flat=False`` keeps them time-major
+``(N, num_steps, num_envs, ...)`` for the on-policy pipeline (GAE needs the
+time axis).
 
 The exploration policy contract is
-``policy_fn(actor_params, obs, key, hypers) -> actions`` with per-member
-(unstacked) arguments; ``exploration_policy`` builds one from the functional
-RL modules (td3/sac/dqn), routing ``hypers["explore_noise"]`` /
-``hypers["epsilon"]`` into the module's exploration knob when the member
-tunes it.
+``policy_fn(actor_params, obs, key, hypers) -> actions`` OR
+``-> (actions, extras)`` with per-member (unstacked) arguments; ``extras``
+is a dict of per-env arrays (e.g. PPO's ``log_prob`` / ``value``) that the
+collector records into the transition, because on-policy updates must see
+the exact statistics of the distribution that sampled each action.
+``exploration_policy`` builds a policy from the functional RL modules:
+a module exposing ``explore`` (ppo) is used verbatim; otherwise
+``hypers["explore_noise"]`` / ``hypers["epsilon"]`` route into the module's
+exploration knob when the member tunes it.
 """
 from __future__ import annotations
 
@@ -24,15 +30,23 @@ from repro.rollout.vecenv import VecEnv
 
 def exploration_policy(module):
     """Exploration policy for a functional RL module, driven by per-member
-    hypers: td3-style modules expose additive-gaussian ``exploration_noise``
-    (hyper ``explore_noise``), dqn-style expose ``epsilon``; anything else
-    (sac's stochastic policy) just consumes the key.
+    hypers.  A module exposing ``explore(params, obs, key, hypers)`` (the
+    extras-emitting on-policy contract, e.g. ppo) is wrapped verbatim;
+    otherwise td3-style modules expose additive-gaussian
+    ``exploration_noise`` (hyper ``explore_noise``), dqn-style expose
+    ``epsilon``; anything else (sac's stochastic policy) just consumes the
+    key.
 
     ``explore_noise`` is deliberately its OWN hyper: td3's ``noise`` is the
     target-policy-smoothing sigma inside the critic update, and reusing it
     for acting would let PBT silently disable smoothing while trying to tune
     exploration.  It is still the fallback for loops that only tune
     ``noise``, with the module default as the last resort."""
+    explore = getattr(module, "explore", None)
+    if explore is not None:
+        def fn(params, obs, key, hypers=None):
+            return explore(params, obs, key, hypers)
+        return fn
     defaults = getattr(module, "DEFAULT_HYPERS", {})
     if "noise" in defaults:
         def fn(params, obs, key, hypers=None):
@@ -61,6 +75,13 @@ def default_exploration(agent):
     return lambda params, obs, key, hypers=None: agent.policy(params, obs, key)
 
 
+def split_actions(policy_out):
+    """Normalize a policy result to ``(actions, extras_dict)``."""
+    if isinstance(policy_out, tuple):
+        return policy_out
+    return policy_out, {}
+
+
 class Collector:
     """Drives a population of actors through per-member :class:`VecEnv`s."""
 
@@ -72,10 +93,14 @@ class Collector:
         """Population-stacked VecEnvState (leaves (N, E, ...))."""
         return jax.vmap(self.venv.reset)(jax.random.split(key, n))
 
-    def collect(self, actors, vstate, key, num_steps: int, hypers=None):
+    def collect(self, actors, vstate, key, num_steps: int, hypers=None,
+                *, flat: bool = True):
         """Act ``num_steps`` batched steps.  Returns ``(vstate, traj)`` with
         traj leaves ``(N, num_steps * num_envs, ...)`` in insertion order
-        (time-major per env so FIFO eviction drops oldest first).
+        (time-major per env so FIFO eviction drops oldest first), or
+        time-major ``(N, num_steps, num_envs, ...)`` with ``flat=False``
+        (the on-policy shape).  Any extras the policy emits are recorded
+        alongside the transition fields.
 
         A population of 1 runs the member body directly (no outer vmap):
         same results, but XLA CPU compiles size-1-vmapped scans to
@@ -87,16 +112,18 @@ class Collector:
             def body(carry, _):
                 vs, k = carry
                 k, ka = jax.random.split(k)
-                actions = self.policy_fn(actor, vs.obs, ka, mhypers)
+                actions, extras = split_actions(
+                    self.policy_fn(actor, vs.obs, ka, mhypers))
                 vs, trans = self.venv.step(vs, actions)
-                return (vs, k), trans
+                return (vs, k), {**trans, **extras}
 
             (vs, _), traj = jax.lax.scan(body, (mvstate, mkey), None,
                                          length=num_steps)
-            # (T, E, ...) -> (T*E, ...)
-            traj = jax.tree.map(
-                lambda x: x.reshape((num_steps * self.venv.num_envs,)
-                                    + x.shape[2:]), traj)
+            if flat:
+                # (T, E, ...) -> (T*E, ...)
+                traj = jax.tree.map(
+                    lambda x: x.reshape((num_steps * self.venv.num_envs,)
+                                        + x.shape[2:]), traj)
             return vs, traj
 
         member_keys = jax.random.split(key, n)

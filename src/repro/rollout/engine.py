@@ -1,20 +1,34 @@
 """The fused, population-vectorized train iteration (paper §4 protocol).
 
-PR 1 compiled the update side; this module compiles the *whole* iteration:
-
-    collect (scan over acting steps, vmapped over members)
-      -> insert into the population of device-resident replay buffers
-      -> sample num_steps batches per member
-      -> num_steps chained update steps
-
+PR 1 compiled the update side; this module compiles the *whole* iteration —
 as ONE jitted function with buffer donation, so a training iteration never
-leaves the device — no host round-trips between the phases, which is where
-the unfused loop loses its time (see ``benchmarks/actor_loop.py``).
+leaves the device (no host round-trips between phases, which is where the
+unfused loop loses its time; see ``benchmarks/actor_loop.py``).  What the
+iteration does with experience depends on the agent's declared
+``experience_kind`` (the ``repro.data.experience`` protocol), and the
+engine builds the matching fused variant:
 
-Updates are gated on ``buffer_can_sample`` with a ``lax.cond``: until every
-member's buffer holds ``batch_size`` transitions the iteration only
-collects, and the update branch is skipped entirely (metrics come back
-zeroed and ``did_update`` False).
+  replay (off-policy: td3 / sac / dqn / shared-critic)
+      collect (scan over acting steps, vmapped over members)
+        -> insert into the population of device-resident replay buffers
+        -> sample num_steps batches per member
+        -> num_steps chained update steps
+      Updates are gated on ``buffer_can_sample`` with a ``lax.cond``: until
+      every member's buffer holds ``batch_size`` transitions the iteration
+      only collects (metrics come back zeroed, ``did_update`` False).
+
+  trajectory (on-policy: ppo)
+      collect (same scan, time-major, recording the policy's log_prob /
+      value extras) -> store the fixed-length rollout
+        -> GAE on device (per-member discount / gae_lambda hypers)
+        -> epochs x shuffled minibatches, chained through the SAME update
+           backend (vectorized / sequential / islands) as everything else
+      There is no warm-up gate: a full rollout is always consumable, so
+      ``did_update`` is always True.
+
+Either way the update count per call is one ``num_steps``-chained (replay)
+or ``epochs * minibatches``-chained (trajectory) backend call, and the
+whole iteration is ONE jitted donated callable.
 
 Consumers go through ``PopTrainer.attach_rollout(env, ...)`` /
 ``trainer.run_env_loop(iters)``; the engine itself owns the mutable
@@ -27,46 +41,38 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.vectorize import chain_steps
-from repro.data.replay_buffer import (buffer_add, buffer_can_sample,
-                                      buffer_init, buffer_sample)
+from repro.data.experience import (compute_gae, experience_ops,
+                                   transition_spec)
+from repro.data.replay_buffer import buffer_sample
 from repro.pop.backend import make_update
 from repro.rollout.collector import Collector, default_exploration
 from repro.rollout.evaluator import Evaluator
 from repro.rollout.vecenv import VecEnv, episode_stats, reset_stats
 
 
-def transition_spec(spec):
-    """One replay-buffer item for an env spec (ShapeDtypeStructs)."""
-    f32 = jnp.float32
-    action = (jax.ShapeDtypeStruct((), jnp.int32) if spec.discrete
-              else jax.ShapeDtypeStruct((spec.act_dim,), f32))
-    return {"obs": jax.ShapeDtypeStruct((spec.obs_dim,), f32),
-            "action": action,
-            "reward": jax.ShapeDtypeStruct((), f32),
-            "next_obs": jax.ShapeDtypeStruct((spec.obs_dim,), f32),
-            "done": jax.ShapeDtypeStruct((), f32)}
-
-
 class RolloutEngine:
-    """Owns VecEnv states + population replay buffers + the fused iteration.
+    """Owns VecEnv states + the population experience buffers + the fused
+    iteration.
 
-    ``pcfg.num_steps`` is the number of chained update steps per iteration
-    and ``pcfg.backend`` picks the update implementation — the same config
+    ``pcfg.backend`` picks the update implementation and ``pcfg.num_steps``
+    the chained update count per iteration (replay kind; the trajectory
+    kind derives its count from ``epochs`` x minibatches) — the same config
     knobs that drive ``PopTrainer.step``.
     """
 
     def __init__(self, agent, pcfg, env, *, key, init_state, hypers=None,
                  num_envs: int = 8, collect_steps: int = 32,
                  batch_size: int = 128, buffer_capacity: int = 100_000,
-                 eval_envs: int = 4, eval_steps: int | None = None,
-                 explore_fn=None, mesh=None):
+                 epochs: int = 4, eval_envs: int = 4,
+                 eval_steps: int | None = None, explore_fn=None, mesh=None):
         self.agent = agent
         self.env = env
         self.n = pcfg.size
-        self.num_steps = max(1, pcfg.num_steps)
         self.num_envs = num_envs
         self.collect_steps = collect_steps
         self.batch_size = batch_size
+        self.kind = getattr(agent, "experience_kind", "replay")
+        self.exp = experience_ops(self.kind)
 
         explore_fn = explore_fn or default_exploration(agent)
         self.venv = VecEnv(env, num_envs)
@@ -76,9 +82,31 @@ class RolloutEngine:
 
         k_env, _ = jax.random.split(key)
         self.vstate = self.collector.init(k_env, self.n)
-        spec_t = transition_spec(env.spec)
-        self.bufs = jax.vmap(lambda _: buffer_init(buffer_capacity, spec_t))(
-            jnp.arange(self.n))
+        extras = getattr(agent, "experience_extras", ("log_prob", "value"))
+        self.bufs = jax.vmap(lambda _: self.exp.init(
+            env.spec, capacity=buffer_capacity, num_steps=collect_steps,
+            num_envs=num_envs, extras=extras))(jnp.arange(self.n))
+
+        if self.kind == "trajectory":
+            if agent.population_level:
+                raise ValueError("trajectory experience requires per-member "
+                                 "agents (population-level updates consume "
+                                 "replay batches)")
+            rollout = collect_steps * num_envs
+            if batch_size > rollout or rollout % batch_size:
+                raise ValueError(
+                    f"on-policy minibatch size {batch_size} must divide the "
+                    f"rollout of collect_steps*num_envs = {rollout} "
+                    f"transitions per member")
+            self.epochs = max(1, epochs)
+            self.minibatches = rollout // batch_size
+            self.num_steps = self.epochs * self.minibatches
+            defaults = getattr(agent, "default_hypers", {})
+            self._gae_defaults = {
+                "discount": defaults.get("discount", 0.99),
+                "gae_lambda": defaults.get("gae_lambda", 0.95)}
+        else:
+            self.num_steps = max(1, pcfg.num_steps)
 
         if agent.population_level:
             # population_update consumes (N, B, ...) per call; chain K calls
@@ -91,29 +119,35 @@ class RolloutEngine:
                                          num_steps=self.num_steps,
                                          donate=False, mesh=mesh)
 
-        # the skip branch of the can-sample gate must return metrics of the
-        # same structure as a real update — resolve shapes abstractly once
-        batch_s = jax.tree.map(
-            lambda s: jax.ShapeDtypeStruct(
-                (self.num_steps, self.n, batch_size) + s.shape, s.dtype),
-            spec_t)
-        if self.num_steps == 1:
+        if self.kind == "replay":
+            # the skip branch of the can-sample gate must return metrics of
+            # the same structure as a real update — resolve shapes
+            # abstractly once
+            spec_t = transition_spec(env.spec)
             batch_s = jax.tree.map(
-                lambda s: jax.ShapeDtypeStruct(s.shape[1:], s.dtype), batch_s)
-        abstract = lambda t: jax.tree.map(
-            lambda x: jax.ShapeDtypeStruct(jnp.shape(x), x.dtype), t)
-        _, metrics_s = jax.eval_shape(
-            self._update_k, abstract(init_state), batch_s,
-            None if hypers is None else abstract(hypers))
-        self._zero_metrics = jax.tree.map(
-            lambda s: jnp.zeros(s.shape, s.dtype), metrics_s)
+                lambda s: jax.ShapeDtypeStruct(
+                    (self.num_steps, self.n, batch_size) + s.shape, s.dtype),
+                spec_t)
+            if self.num_steps == 1:
+                batch_s = jax.tree.map(
+                    lambda s: jax.ShapeDtypeStruct(s.shape[1:], s.dtype),
+                    batch_s)
+            abstract = lambda t: jax.tree.map(
+                lambda x: jax.ShapeDtypeStruct(jnp.shape(x), x.dtype), t)
+            _, metrics_s = jax.eval_shape(
+                self._update_k, abstract(init_state), batch_s,
+                None if hypers is None else abstract(hypers))
+            self._zero_metrics = jax.tree.map(
+                lambda s: jnp.zeros(s.shape, s.dtype), metrics_s)
+            iteration = self._build_offpolicy()
+        else:
+            iteration = self._build_onpolicy()
 
         self._iteration = jax.jit(
-            self._build_iteration(),
-            donate_argnums=(0, 1, 2) if pcfg.donate else ())
+            iteration, donate_argnums=(0, 1, 2) if pcfg.donate else ())
 
-    # ------------------------------------------------------------ fused jit
-    def _build_iteration(self):
+    # ----------------------------------------------------- off-policy fused
+    def _build_offpolicy(self):
         K, n, B = self.num_steps, self.n, self.batch_size
 
         def iteration(state, bufs, vstate, hypers, key):
@@ -121,9 +155,9 @@ class RolloutEngine:
             actors = self.agent.actor_params(state)
             vstate, traj = self.collector.collect(
                 actors, vstate, kc, self.collect_steps, hypers)
-            bufs = jax.vmap(buffer_add)(bufs, traj)
+            bufs = jax.vmap(self.exp.add)(bufs, traj)
             can = jnp.all(jax.vmap(
-                lambda b: buffer_can_sample(b, B))(bufs))
+                lambda b: self.exp.ready(b, B))(bufs))
 
             def do_update(state):
                 keys = jax.random.split(ks, K * n)
@@ -143,6 +177,66 @@ class RolloutEngine:
 
         return iteration
 
+    # ------------------------------------------------------ on-policy fused
+    def member_batches(self, mbuf, actor, mhypers, key):
+        """One member's GAE + shuffled epoch/minibatch stack: the rollout
+        ``(T, E, ...)`` becomes update batches ``(K, B, ...)`` with
+        K = epochs * minibatches (jit-able; per-member args)."""
+        d = mbuf.data
+        T, E = self.collect_steps, self.num_envs
+        D, B, K = T * E, self.batch_size, self.num_steps
+        h = dict(self._gae_defaults)
+        if mhypers:
+            h = {**h, **{k: mhypers[k] for k in h if k in mhypers}}
+        # V(s') is evaluated on the stored pre-reset next_obs, so a
+        # truncated step still bootstraps while `done` zeroes true
+        # terminals; `ep_end` cuts the lambda chain at either
+        next_v = self.agent.value(actor, d["next_obs"])
+        ep_end = jnp.maximum(d["done"], d["truncated"])
+        adv, ret = compute_gae(d["reward"], d["value"], next_v,
+                               d["done"], ep_end,
+                               h["discount"], h["gae_lambda"])
+        flat = {"obs": d["obs"], "action": d["action"],
+                "log_prob": d["log_prob"], "value": d["value"],
+                "advantage": adv, "return": ret}
+        flat = jax.tree.map(lambda x: x.reshape((D,) + x.shape[2:]), flat)
+        idx = jax.vmap(lambda k: jax.random.permutation(k, D))(
+            jax.random.split(key, self.epochs))             # (epochs, D)
+        idx = idx.reshape((K, B))
+        return jax.tree.map(lambda x: x[idx], flat)         # (K, B, ...)
+
+    def population_batches(self, bufs, actors, hypers, key):
+        """The whole population's update batches in the chained layout
+        ``(K, N, B, ...)`` (``(N, B, ...)`` when K == 1)."""
+        keys = jax.random.split(key, self.n)
+        if hypers is None:
+            batches = jax.vmap(
+                lambda b, a, k: self.member_batches(b, a, None, k))(
+                    bufs, actors, keys)
+        else:
+            batches = jax.vmap(self.member_batches)(bufs, actors, hypers,
+                                                    keys)
+        batches = jax.tree.map(lambda x: jnp.swapaxes(x, 0, 1), batches)
+        if self.num_steps == 1:
+            batches = jax.tree.map(lambda x: x[0], batches)
+        return batches
+
+    def _build_onpolicy(self):
+        T = self.collect_steps
+
+        def iteration(state, bufs, vstate, hypers, key):
+            kc, kp = jax.random.split(key)
+            actors = self.agent.actor_params(state)
+            vstate, traj = self.collector.collect(
+                actors, vstate, kc, T, hypers, flat=False)
+            bufs = jax.vmap(self.exp.add)(bufs, traj)
+            batches = self.population_batches(bufs, actors, hypers, kp)
+            state, metrics = self._update_k(state, batches, hypers)
+            return (state, bufs, vstate, metrics, episode_stats(vstate),
+                    jnp.ones((), bool))
+
+        return iteration
+
     # ------------------------------------------------------------- stepping
     def iterate(self, state, hypers, key):
         """One fused train iteration; returns the new population state plus
@@ -153,7 +247,7 @@ class RolloutEngine:
 
     # -------------------------------------------------- elastic re-layout
     def export_state(self):
-        """The engine's mutable device state — the population of replay
+        """The engine's mutable device state — the population of experience
         buffers and the env states (with their episode accounting) — as one
         pytree, every leaf carrying the leading population axis, so
         ``repro.elastic`` can checkpoint it and gather it by member index
@@ -179,7 +273,10 @@ class RolloutEngine:
         self.vstate = reset_stats(self.vstate)
 
     def probe_obs(self, key, size: int):
-        """Recent-ish observations from member 0's buffer (DvD behavior
+        """Recent-ish observations from member 0's experience (DvD behavior
         probes and similar diagnostics)."""
         buf0 = jax.tree.map(lambda x: x[0], self.bufs)
+        if self.kind == "trajectory":
+            obs = buf0.data["obs"]
+            return obs.reshape((-1,) + obs.shape[2:])[:size]
         return buffer_sample(buf0, key, size)["obs"]

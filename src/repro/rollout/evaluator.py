@@ -17,6 +17,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.envs.core import Env
+from repro.rollout.collector import split_actions
 from repro.rollout.vecenv import VecEnv
 
 
@@ -38,7 +39,10 @@ class Evaluator:
 
         def body(carry, _):
             vs, ret, alive = carry
-            actions = self.policy_fn(actor, vs.obs, None, None)
+            # extras-emitting policies (ppo) return (actions, extras) even
+            # on the deterministic key=None path; evaluation needs actions
+            actions, _ = split_actions(self.policy_fn(actor, vs.obs,
+                                                      None, None))
             vs, trans = self.venv.step(vs, actions)
             ret = ret + trans["reward"] * alive
             # episode END (termination or truncation), not the transition's

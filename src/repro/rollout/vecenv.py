@@ -15,7 +15,10 @@ bootstrapping) while ``state.obs`` — the next policy input — is the
 post-auto-reset observation of the new episode.  Episode accounting counts
 both terminations and time-limit truncations as episode ends, but the
 transition's ``done`` stores termination only, so TD targets bootstrap
-through truncations.
+through truncations; ``truncated`` rides along separately because the
+on-policy pipeline (GAE in ``repro.data.experience``) must additionally cut
+its lambda chain at a time limit.  Each experience buffer stores only the
+keys its spec declares, so the richer transition feeds every kind.
 """
 from __future__ import annotations
 
@@ -76,7 +79,8 @@ class VecEnv:
                                           state.last_episode_return))
         transition = {"obs": state.obs, "action": actions, "reward": reward,
                       "next_obs": terminal_obs,
-                      "done": (done & ~truncated).astype(jnp.float32)}
+                      "done": (done & ~truncated).astype(jnp.float32),
+                      "truncated": truncated.astype(jnp.float32)}
         return new, transition
 
 

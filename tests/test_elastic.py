@@ -74,6 +74,37 @@ def test_plan_layout_paper_regime_and_validation():
         IslandLayout(devices=4, islands=4, data=1, model=1, population=6)
 
 
+def test_plan_layout_explicit_devices():
+    """Heterogeneous hosts: an explicit ``devices=`` sequence pins both the
+    device COUNT and the ORDER the mesh walks them in (islands follow the
+    caller's sequence, not enumeration order) — pure math until .mesh."""
+    lay = plan_layout(0, 8, devices=[3, 2, 1, 0])
+    assert lay.devices == 4 and lay.device_ids == (3, 2, 1, 0)
+    assert (lay.islands, lay.data, lay.model) == (4, 1, 1)
+    # matching num_devices is allowed; a disagreeing one is not
+    assert plan_layout(4, 8, devices=[3, 2, 1, 0]) == lay
+    with pytest.raises(ValueError, match="disagrees"):
+        plan_layout(3, 4, devices=[0, 1])
+    with pytest.raises(ValueError, match="duplicate"):
+        IslandLayout(devices=2, islands=2, data=1, model=1, population=4,
+                     device_ids=(0, 0))
+    with pytest.raises(ValueError, match="device ids for a layout"):
+        IslandLayout(devices=2, islands=2, data=1, model=1, population=4,
+                     device_ids=(0,))
+
+    # jax Device objects are accepted, and the built mesh follows the
+    # given order exactly (reversed when this process has > 1 device)
+    devs = jax.devices()
+    chosen = list(reversed(devs)) if len(devs) > 1 else devs[:1]
+    lay2 = plan_layout(0, len(chosen), devices=chosen)
+    assert lay2.device_ids == tuple(d.id for d in chosen)
+    assert list(lay2.mesh.devices.flat) == chosen
+    # ids absent from this process fail at mesh-build time, loudly
+    bad = plan_layout(0, 1, devices=[max(d.id for d in devs) + 7])
+    with pytest.raises(ValueError, match="not present"):
+        bad.mesh
+
+
 # ------------------------------------------------------------ resize math
 
 def test_shrink_population_keeps_fittest():
