@@ -1,5 +1,29 @@
 """Paper Table 3: initial compilation time for a population of 20 agents,
-Jax (Vectorized) with chained update steps."""
+Jax (Vectorized) with chained update steps.
+
+Two arms:
+
+  * in-process (default) — one cold XLA compile per algorithm, timed
+    directly (the paper's table).
+  * ``--restart`` — the persistent-compilation-cache story: a child
+    process compiles the same program twice, in two *separate* Python
+    processes sharing one ``--compile-cache`` directory (exactly what
+    ``launch/train.py --compile-cache`` / ``launch/serve.py
+    --compile-cache`` do across restarts).  The first child pays the cold
+    compile and populates the cache; the second deserializes the
+    executable instead of rebuilding it.  Emitted rows are
+    ``arm=cold`` / ``arm=warm`` plus their ratio — the restart tax the
+    cache removes.
+
+``--json PATH`` dumps all rows in the same artifact style as
+``actor_loop`` / ``serve_throughput``.
+"""
+import argparse
+import json
+import os
+import subprocess
+import sys
+import tempfile
 import time
 
 import jax
@@ -12,21 +36,99 @@ from repro.rl import td3, sac
 OBS, ACT = 17, 6
 
 
-def run(n=20, num_steps=10):
+def _compile_once(mod, n, num_steps) -> float:
+    """Seconds for the first (compiling) call of the chained vectorized
+    update."""
     key = jax.random.PRNGKey(0)
+    pop = population_init(lambda k: mod.init(k, OBS, ACT), key, n)
+    batches = jax.tree.map(
+        lambda x: jnp.broadcast_to(x, (num_steps,) + x.shape),
+        td3_batch(key, n))
+    fn = vectorized_update(mod.update, num_steps, donate=False)
+    t0 = time.perf_counter()
+    jax.block_until_ready(fn(pop, batches, None))
+    return time.perf_counter() - t0
+
+
+def run(n=20, num_steps=10):
     emit(["bench", "agent", "pop", "num_steps", "compile_s"])
+    rows = []
     for name, mod in (("td3", td3), ("sac", sac)):
-        pop = population_init(lambda k: mod.init(k, OBS, ACT), key, n)
-        batches = jax.tree.map(
-            lambda x: jnp.broadcast_to(x, (num_steps,) + x.shape),
-            td3_batch(key, n))
-        fn = vectorized_update(mod.update, num_steps, donate=False)
-        t0 = time.perf_counter()
-        out = fn(pop, batches, None)
-        jax.block_until_ready(out)
-        emit(["compile_time", name, n, num_steps,
-              round(time.perf_counter() - t0, 2)])
+        row = {"bench": "compile_time", "agent": name, "pop": n,
+               "num_steps": num_steps,
+               "compile_s": round(_compile_once(mod, n, num_steps), 2)}
+        rows.append(row)
+        emit([row[k] for k in ("bench", "agent", "pop", "num_steps",
+                               "compile_s")])
+    return rows
+
+
+# ------------------------------------------------------- restart arm
+def _child(cache_dir, n, num_steps):
+    """One process lifetime: enable the persistent cache, compile once,
+    report the wall time on stdout (the parent parses the sentinel)."""
+    from repro import compat
+    compat.enable_compilation_cache(cache_dir)
+    print(f"compile_s={_compile_once(td3, n, num_steps):.4f}", flush=True)
+
+
+def run_restart(n=20, num_steps=10, cache_dir=None):
+    """Cold-vs-warm restart: two child processes, one shared cache dir."""
+    tmp = None
+    if cache_dir is None:
+        tmp = tempfile.TemporaryDirectory(prefix="repro_xla_cache_")
+        cache_dir = tmp.name
+    emit(["bench", "agent", "pop", "num_steps", "arm", "compile_s",
+          "warm_over_cold"])
+    rows, secs = [], {}
+    try:
+        for arm in ("cold", "warm"):
+            out = subprocess.run(
+                [sys.executable, "-m", "benchmarks.compile_time", "--child",
+                 "--cache-dir", cache_dir, "--pop", str(n),
+                 "--num-steps", str(num_steps)],
+                capture_output=True, text=True, check=True,
+                env={**os.environ, "PYTHONPATH": "src"},
+                cwd=os.path.join(os.path.dirname(__file__), ".."))
+            line = [l for l in out.stdout.splitlines()
+                    if l.startswith("compile_s=")][-1]
+            secs[arm] = float(line.split("=")[1])
+            row = {"bench": "compile_time_restart", "agent": "td3",
+                   "pop": n, "num_steps": num_steps, "arm": arm,
+                   "compile_s": round(secs[arm], 3),
+                   "warm_over_cold": round(secs[arm] / secs["cold"], 3)}
+            rows.append(row)
+            emit([row[k] for k in ("bench", "agent", "pop", "num_steps",
+                                   "arm", "compile_s", "warm_over_cold")])
+    finally:
+        if tmp is not None:
+            tmp.cleanup()
+    return rows
 
 
 if __name__ == "__main__":
-    run()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--restart", action="store_true",
+                    help="cold-vs-warm compile across process restarts "
+                    "sharing a persistent compilation cache")
+    ap.add_argument("--child", action="store_true", help=argparse.SUPPRESS)
+    ap.add_argument("--cache-dir", default=None,
+                    help="persistent cache dir for --restart (default: a "
+                    "fresh temp dir, removed afterwards)")
+    ap.add_argument("--fast", action="store_true",
+                    help="smaller population / fewer chained steps (CI)")
+    ap.add_argument("--pop", type=int, default=None)
+    ap.add_argument("--num-steps", type=int, default=None)
+    ap.add_argument("--json", default=None, help="also dump rows as JSON")
+    args = ap.parse_args()
+    n = args.pop or (4 if args.fast else 20)
+    num_steps = args.num_steps or (3 if args.fast else 10)
+    if args.child:
+        _child(args.cache_dir, n, num_steps)
+        sys.exit(0)
+    rows = (run_restart(n=n, num_steps=num_steps, cache_dir=args.cache_dir)
+            if args.restart else run(n=n, num_steps=num_steps))
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(rows, f, indent=2)
+        print(f"wrote {args.json}")

@@ -1,0 +1,141 @@
+"""Serving benchmark: ensemble inference throughput and latency.
+
+The paper's training claim — a population costs ~one member when one
+compiled call covers everyone — has an inference-side mirror, and this
+harness measures it: requests/sec and p50/p99 latency of
+``repro.serve.BatchServer`` (every ensemble member's deterministic forward
++ the reduction as ONE jitted donated call) across population size ×
+request batch size.  Latency is end-to-end as a client sees it: host-side
+padding, the explicit H2D request ingress, the jitted ensemble call, and
+the D2H action egress.
+
+Reported per (pop, batch) cell: p50/p99 ms per request batch, requests/sec,
+latency relative to a 1-member ensemble at the same batch (the
+minimal-overhead claim, inference edition), and ``single_jit`` — whether a
+warm call runs clean under ``jax.transfer_guard("disallow")`` on a
+device-resident batch (the no-hidden-round-trip property).  ``--islands``
+additionally runs the ``shard_map``-over-islands arm on multi-device
+processes (CI's serving job fakes 8).  ``--json PATH`` dumps rows in the
+same JSON-artifact style as ``actor_loop`` / ``elastic_resize`` for trend
+tracking.
+"""
+import argparse
+import json
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit
+from repro.envs import make
+from repro.pop import ModuleAgent
+from repro.rl import td3
+from repro.serve import BatchServer, PolicyForward, make_serving_set
+
+HIDDEN = (32, 32)   # same acting-regime nets as actor_loop: small enough
+                    # that the 2 CPU cores measure the loop, not matmuls
+
+FIELDS = ("bench", "algo", "impl", "mode", "pop", "batch", "p50_ms",
+          "p99_ms", "req_per_s", "rel_to_pop1", "single_jit")
+
+
+def _server(env, agent, n, batch, mode, mesh=None):
+    """A BatchServer over a fresh n-member population (random init — the
+    forward's cost doesn't care whether the params are trained), serving
+    ALL members as the ensemble."""
+    actors = agent.actor_params(
+        agent.population_init(jax.random.PRNGKey(0), n))
+    sset = make_serving_set(actors, np.arange(n), step=0,
+                            fitness=np.arange(n, dtype=np.float64))
+    server = BatchServer(PolicyForward.for_agent(agent), env.spec, sset,
+                         max_batch=batch, mode=mode, mesh=mesh)
+    return server.warmup()
+
+
+def _probe_single_jit(server, obs_dim) -> bool:
+    """A warm ensemble call on a device-resident padded batch must not move
+    a single byte between host and device implicitly."""
+    obs = server.place_request(
+        np.zeros((server.max_batch, obs_dim), np.float32))
+    try:
+        with jax.transfer_guard("disallow"):
+            jax.block_until_ready(server.infer_device(obs))
+        return True
+    except Exception:
+        return False
+
+
+def _measure(server, env, iters: int):
+    """Per-request-batch wall latencies (seconds) for ``iters`` fresh
+    request batches of random observations."""
+    rng = np.random.default_rng(0)
+    reqs = [rng.standard_normal(
+        (server.max_batch, env.spec.obs_dim)).astype(np.float32)
+        for _ in range(iters)]
+    for obs in reqs[:3]:
+        server.serve(obs)
+    lat = []
+    for obs in reqs:
+        t0 = time.perf_counter()
+        server.serve(obs)
+        lat.append(time.perf_counter() - t0)
+    return np.asarray(lat)
+
+
+def run(pop_sizes=(1, 2, 4, 8, 16), batch_sizes=(1, 32, 256), mode="mean",
+        iters=100, islands=False, json_path=None):
+    env = make("pendulum")
+    agent = ModuleAgent(td3, env.spec.obs_dim, env.spec.act_dim,
+                        hidden=HIDDEN)
+    impls = ["vmap"] + (["islands"] if islands else [])
+    if islands and len(jax.devices()) == 1:
+        print("# --islands on a single device: arm still runs, mesh is "
+              "degenerate (set XLA_FLAGS=--xla_force_host_platform_"
+              "device_count=8 for the real topology)")
+
+    emit(list(FIELDS))
+    rows = []
+    base = {}
+    for impl in impls:
+        for n in pop_sizes:
+            mesh = None
+            if impl == "islands":
+                from repro.elastic import plan_layout
+                mesh = plan_layout(len(jax.devices()), n).mesh
+            for b in batch_sizes:
+                server = _server(env, agent, n, b, mode, mesh=mesh)
+                single_jit = _probe_single_jit(server, env.spec.obs_dim)
+                lat = _measure(server, env, iters)
+                p50 = float(np.percentile(lat, 50))
+                row = {"bench": "serve_throughput", "algo": "td3",
+                       "impl": impl, "mode": mode, "pop": n, "batch": b,
+                       "p50_ms": round(1e3 * p50, 3),
+                       "p99_ms": round(1e3 * float(np.percentile(lat, 99)),
+                                       3),
+                       "req_per_s": round(b * len(lat) / lat.sum(), 1),
+                       "rel_to_pop1": round(
+                           p50 / base.setdefault((impl, b), p50), 2),
+                       "single_jit": single_jit}
+                rows.append(row)
+                emit([row[k] for k in FIELDS])
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(rows, f, indent=2)
+        print(f"wrote {json_path}")
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="smaller pops / fewer iters (CI mode)")
+    ap.add_argument("--mode", default="mean", choices=["mean", "vote", "best"])
+    ap.add_argument("--islands", action="store_true",
+                    help="add the shard_map-over-islands arm (multi-device)")
+    ap.add_argument("--json", default=None, help="also dump rows as JSON")
+    args = ap.parse_args()
+    if args.fast:
+        run(pop_sizes=(1, 2, 4), batch_sizes=(1, 64), iters=25,
+            mode=args.mode, islands=args.islands, json_path=args.json)
+    else:
+        run(mode=args.mode, islands=args.islands, json_path=args.json)

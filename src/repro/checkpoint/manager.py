@@ -165,14 +165,36 @@ class CheckpointManager:
             return None
         return load_aux(self._ckpt_path(step), name, template)
 
-    def peek_extra(self, step: int | None = None) -> dict | None:
+    def peek_extra(self, step: int | None = None,
+                   require: tuple = ("step", "size", "fitness")) -> dict | None:
         """The JSON extras of a checkpoint WITHOUT loading any arrays —
-        cheap enough for a launcher deciding how to re-layout before it
-        builds anything (``repro.elastic`` reads size/fitness here)."""
+        cheap enough for a launcher deciding how to re-layout, or a serving
+        watcher deciding whether to promote, before anything is built
+        (``repro.elastic`` reads size/fitness here; ``repro.serve`` reads
+        all three).
+
+        Returns None when the directory holds no checkpoint.  A checkpoint
+        that exists but lacks a required key raises instead of returning a
+        partially-populated dict: the old behaviour let a pre-size/fitness
+        checkpoint (written before PopTrainer.save recorded them) flow into
+        ``meta.get(...)`` call sites and silently disable elastic resize
+        and fitness-ranked promotion.  ``fitness`` may legitimately be
+        recorded as None (a save right after an evolve) — required means
+        the key is PRESENT, not non-null.  Pass ``require=()`` to read raw
+        extras from checkpoints this trainer didn't write."""
         step = self.latest() if step is None else step
         if step is None:
             return None
-        return load_extra(self._ckpt_path(step))
+        extra = load_extra(self._ckpt_path(step))
+        missing = [k for k in require if k not in extra]
+        if missing:
+            raise KeyError(
+                f"checkpoint {self._ckpt_path(step)} lacks extras "
+                f"{missing} (has {sorted(extra)}): it predates the "
+                f"size/fitness metadata PopTrainer.save records — resume "
+                f"it with the run that wrote it and re-save, or read raw "
+                f"extras with peek_extra(require=())")
+        return extra
 
     def _gc(self):
         steps = self.all_steps()

@@ -62,3 +62,33 @@ def make_mesh(axis_shapes, axis_names, *, explicit: bool = False):
     kind = axis_type.Explicit if explicit else axis_type.Auto
     return jax.make_mesh(axis_shapes, axis_names,
                          axis_types=(kind,) * len(axis_names))
+
+
+def enable_compilation_cache(path) -> bool:
+    """Point jax's persistent compilation cache at ``path`` (created if
+    missing), so a process restart reuses yesterday's XLA executables
+    instead of recompiling — the production-restart half of the paper's
+    compilation-cost protocol (``benchmarks/compile_time.py`` pins the
+    win; the resize cycle in ``benchmarks/elastic_resize.py`` is
+    compile-dominated, which is exactly what this amortizes).
+
+    The knobs moved across releases: the dir config is stable, but the
+    min-compile-time / min-entry-size thresholds (which default to
+    skipping the small CPU executables this repo compiles) appeared later
+    — each is applied best-effort.  Returns True when the cache dir was
+    accepted, False when this jax has no persistent cache at all.
+    """
+    import os
+
+    os.makedirs(str(path), exist_ok=True)
+    try:
+        jax.config.update("jax_compilation_cache_dir", str(path))
+    except AttributeError:
+        return False
+    for knob, value in (("jax_persistent_cache_min_compile_time_secs", 0),
+                        ("jax_persistent_cache_min_entry_size_bytes", -1)):
+        try:
+            jax.config.update(knob, value)
+        except AttributeError:
+            pass
+    return True

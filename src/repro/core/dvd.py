@@ -23,14 +23,22 @@ def behavior_embedding(policy_apply, pop_params, probe_obs):
     return jax.vmap(one)(pop_params)
 
 
-def dvd_loss(embeddings, *, length_scale: float = 1.0, eps: float = 1e-4):
-    """-log det of the RBF kernel matrix of member embeddings (maximize
-    diversity == minimize this loss)."""
+def rbf_kernel(embeddings, *, length_scale: float = 1.0, eps: float = 1e-4):
+    """The RBF kernel matrix of member embeddings (N, N) whose determinant
+    IS the DvD diversity measure — shared by the training-time loss below
+    and the serving-set selection in ``repro.serve.ensemble``, so "diverse"
+    means the same thing on both sides."""
     d2 = jnp.sum(
         jnp.square(embeddings[:, None, :] - embeddings[None, :, :]), axis=-1)
     n = embeddings.shape[0]
     k = jnp.exp(-d2 / (2 * length_scale ** 2 * embeddings.shape[-1]))
-    k = k + eps * jnp.eye(n)
+    return k + eps * jnp.eye(n)
+
+
+def dvd_loss(embeddings, *, length_scale: float = 1.0, eps: float = 1e-4):
+    """-log det of the RBF kernel matrix of member embeddings (maximize
+    diversity == minimize this loss)."""
+    k = rbf_kernel(embeddings, length_scale=length_scale, eps=eps)
     sign, logdet = jnp.linalg.slogdet(k)
     return -logdet
 

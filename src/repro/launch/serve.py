@@ -1,9 +1,25 @@
-"""Batched serving driver: prefill + decode loop with a KV cache.
+"""Serving driver: both inference workloads behind one CLI.
+
+  * ``--arch <id>``   — LM batched decode: prefill + jit'd decode loop with
+                        a KV cache (one compiled step reused every token —
+                        the inference analogue of the paper's compilation
+                        protocol).
+  * ``--algo <name>`` — population-as-ensemble RL serving: load any
+                        checkpoint ``launch/train.py`` produced, promote a
+                        fitness+diversity serving set
+                        (``repro.serve.ContinuousEvaluator``), and answer
+                        batched observation requests through the
+                        ``BatchServer``'s single jitted ensemble call —
+                        continuously re-polling the checkpoint dir so a
+                        still-training population keeps refreshing the
+                        ensemble it serves.
 
 ``python -m repro.launch.serve --arch qwen2-0.5b --smoke --tokens 32``
-runs a batch of requests through one prefill pass and a jit'd decode loop
-(one compiled step, reused every token — the inference analogue of the
-paper's compilation protocol).
+``python -m repro.launch.serve --algo td3 --ckpt-dir /tmp/repro_ckpt``
+
+``--compile-cache DIR`` points jax's persistent compilation cache at DIR
+(shared with ``launch/train.py``) so serving restarts skip cold XLA
+compiles — see ``benchmarks/compile_time.py`` for the measured win.
 """
 from __future__ import annotations
 
@@ -12,6 +28,7 @@ import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs import get_config
 from repro.models import lm as lm_mod
@@ -46,15 +63,123 @@ def generate(cfg, params, prompt_tokens, *, steps: int, max_len: int,
     return jnp.concatenate(out, axis=1)
 
 
+def _serve_rl(args):
+    """RL branch: ensemble inference over a trained population.
+
+    Requests are synthesized from env resets (the env is the traffic
+    model this box has); a real frontend swaps :func:`_request_batch` for
+    its socket and keeps everything else.
+    """
+    from repro.checkpoint import CheckpointManager
+    from repro.envs import make
+    from repro.rl import make_agent
+    from repro.serve import (BatchServer, ContinuousEvaluator,
+                             probe_observations)
+
+    env = make(args.env)
+    agent = make_agent(args.algo, env.spec)
+    mgr = CheckpointManager(args.ckpt_dir)
+    if mgr.latest() is None:
+        raise FileNotFoundError(
+            f"no checkpoint in {args.ckpt_dir}; train one first: "
+            f"python -m repro.launch.train --algo {args.algo} "
+            f"--env {args.env} --ckpt-dir {args.ckpt_dir}")
+
+    key = jax.random.PRNGKey(args.seed)
+    key, kp = jax.random.split(key)
+    watcher = ContinuousEvaluator(
+        mgr, agent, size=args.ensemble,
+        probe_obs=probe_observations(env, kp, args.probe),
+        diversity_weight=args.diversity_weight)
+    sset = watcher.poll()
+
+    mesh = None
+    if args.islands:
+        from repro.elastic import plan_layout
+        mesh = plan_layout(len(jax.devices()), sset.size).mesh
+        print(f"[serve] islands mesh over {len(jax.devices())} devices")
+    server = BatchServer(watcher.forward, env.spec, sset,
+                         max_batch=args.batch, mode=args.mode, mesh=mesh)
+    print(f"[serve] algo={args.algo} env={args.env} mode={args.mode} "
+          f"batch={args.batch} {sset.describe()}")
+
+    def _request_batch(k):
+        _, obs = jax.vmap(env.reset)(jax.random.split(k, args.batch))
+        return np.asarray(obs)
+
+    # warm-up compiles the ensemble executable outside the timed loop
+    server.warmup()
+    server.serve(_request_batch(key))
+
+    lat = []
+    t0 = time.time()
+    for i in range(args.requests):
+        key, kr = jax.random.split(key)
+        obs = _request_batch(kr)
+        t1 = time.perf_counter()
+        actions = server.serve(obs)
+        lat.append(time.perf_counter() - t1)
+        if args.poll_every and (i + 1) % args.poll_every == 0:
+            newer = watcher.poll(server)
+            if newer is not None:
+                ev = watcher.events[-1]
+                print(f"[serve] promoted step {newer.step}: "
+                      f"+{ev['promoted']} -{ev['demoted']}")
+    dt = time.time() - t0
+    served = args.requests * args.batch
+    lat_ms = 1e3 * np.asarray(lat)
+    print(f"[serve] {served} requests in {dt:.2f}s "
+          f"({served / dt:.0f} req/s, p50 {np.percentile(lat_ms, 50):.2f} ms"
+          f" p99 {np.percentile(lat_ms, 99):.2f} ms per batch)")
+    print(f"[serve] last actions[:2] = {np.asarray(actions)[:2]}")
+    return served / dt
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
+    ap.add_argument("--arch", default=None,
+                    help="LM config id (decode workload; exclusive with "
+                    "--algo)")
+    ap.add_argument("--algo", default=None,
+                    help="RL algorithm whose launch/train.py checkpoint to "
+                    "serve as an ensemble (exclusive with --arch)")
+    ap.add_argument("--env", default="pendulum",
+                    help="pure-JAX env of the trained checkpoint")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt",
+                    help="checkpoint dir written by launch/train.py")
+    ap.add_argument("--ensemble", type=int, default=4,
+                    help="serving-set size (fitness + DvD selection)")
+    ap.add_argument("--mode", default="mean",
+                    choices=["mean", "vote", "best"],
+                    help="ensemble reduction")
+    ap.add_argument("--requests", type=int, default=64,
+                    help="request batches to serve in the demo loop")
+    ap.add_argument("--poll-every", type=int, default=16,
+                    help="re-poll the checkpoint dir every N batches "
+                    "(0 = never): continuous promotion")
+    ap.add_argument("--probe", type=int, default=32,
+                    help="probe observations for behavioral embeddings")
+    ap.add_argument("--diversity-weight", type=float, default=1.0)
+    ap.add_argument("--islands", action="store_true",
+                    help="shard the ensemble's member axis over all "
+                    "devices (populations too big for one accelerator)")
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=8)
     ap.add_argument("--tokens", type=int, default=16)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--compile-cache", default=None, metavar="DIR",
+                    help="persistent jax compilation cache directory "
+                    "(share it with launch/train.py)")
     args = ap.parse_args(argv)
+
+    if (args.arch is None) == (args.algo is None):
+        ap.error("pass exactly one of --arch (LM) or --algo (RL ensemble)")
+    if args.compile_cache:
+        from repro import compat
+        compat.enable_compilation_cache(args.compile_cache)
+    if args.algo is not None:
+        return _serve_rl(args)
 
     cfg = get_config(args.arch)
     if args.smoke:

@@ -31,7 +31,9 @@ Production features exercised here (scaled down to whatever devices exist):
     population differs from ``--population`` — the worst members are
     dropped (or PBT clones refill) via ``repro.elastic.restore_elastic``,
     so losing accelerators between runs never strands a checkpoint
-  * synthetic sharded token pipeline with restart-stable streams.
+  * synthetic sharded token pipeline with restart-stable streams
+  * persistent XLA compilation cache (``--compile-cache DIR``, shared with
+    ``launch/serve.py``) so restarts don't pay cold compiles.
 """
 from __future__ import annotations
 
@@ -78,9 +80,9 @@ def _run_rl(args):
                            collect_steps=args.collect_steps,
                            batch_size=args.batch, epochs=args.epochs)
     if args.resume == "auto":
-        meta = trainer._mgr.peek_extra()
+        meta = trainer._mgr.peek_extra()   # strict: size/fitness guaranteed
         if (args.resize == "auto" and meta is not None
-                and meta.get("size", n) != n):
+                and meta["size"] != n):
             from repro.elastic import restore_elastic
             resumed, lineage = restore_elastic(trainer)
             print(f"[train] elastic resume from step {resumed}: population "
@@ -153,10 +155,18 @@ def main(argv=None):
                     "(worst members dropped / PBT clones refill)")
     ap.add_argument("--lr", type=float, default=3e-4)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--compile-cache", default=None, metavar="DIR",
+                    help="persistent jax compilation cache directory: "
+                    "restarts (and launch/serve.py, pointed at the same "
+                    "DIR) reuse compiled executables instead of paying "
+                    "cold XLA compiles")
     args = ap.parse_args(argv)
 
     if (args.arch is None) == (args.algo is None):
         ap.error("pass exactly one of --arch (LM) or --algo (RL)")
+    if args.compile_cache:
+        from repro import compat
+        compat.enable_compilation_cache(args.compile_cache)
     if args.algo is not None:
         return _run_rl(args)
 
@@ -183,9 +193,9 @@ def main(argv=None):
 
     start_step = 0
     if args.resume == "auto":
-        meta = trainer._mgr.peek_extra()
+        meta = trainer._mgr.peek_extra()   # strict: size/fitness guaranteed
         if (args.resize == "auto" and meta is not None
-                and meta.get("size", n) != n):
+                and meta["size"] != n):
             from repro.elastic import restore_elastic
             resumed, lineage = restore_elastic(trainer)
             print(f"[train] elastic resume from step {resumed}: population "

@@ -235,11 +235,13 @@ class PopTrainer:
 
     def save(self, extra: dict | None = None, *, blocking: bool = False):
         """Checkpoint the full elastic-resumable state: the main tree
-        (population state + strategy internals), hypers and the attached
-        rollout engine's replay buffers/env states as aux trees, and — in
-        the JSON extras — the population size and current fitness, so
-        ``repro.elastic.restore_elastic`` can resize by fitness when the
-        next run has a different device count or population.
+        (population state + strategy internals), the stacked actor params
+        plus hypers and the attached rollout engine's replay buffers/env
+        states as aux trees, and — in the JSON extras — the population
+        size and current fitness, so ``repro.elastic.restore_elastic`` can
+        resize by fitness when the next run has a different device count
+        or population, and ``repro.serve.ContinuousEvaluator`` can promote
+        serving members from the actors aux without a trainer restore.
 
         Only the live fitness window is recorded: ``last_fitness``
         describes pre-evolve states that may just have been replaced
@@ -255,8 +257,12 @@ class PopTrainer:
         # hypers and the rollout engine state are aux trees with their own
         # templates, so a restoring trainer that lacks either (a null
         # strategy after an elastic shrink to size 1; no attached rollout)
-        # can still restore the main tree
-        aux = {}
+        # can still restore the main tree; "actors" duplicates the policy
+        # slice of the main tree so ``repro.serve`` can promote members
+        # from a live checkpoint against an agent-derived template — no
+        # optimizer/strategy/buffer restore on the serving side (the few
+        # extra actor bytes are noise next to the replay buffers)
+        aux = {"actors": self.actors}
         if self.hypers is not None:
             aux["hypers"] = self.hypers
         if self._rollout is not None:

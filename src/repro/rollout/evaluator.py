@@ -8,6 +8,13 @@ member — every env stops accumulating at its FIRST terminal so auto-reset
 never leaks a second episode into the score — and returns the mean
 first-episode return per member, shape (N,).
 
+The policy itself is NOT this module's: the Evaluator is env-stepping
+composed with :class:`repro.serve.PolicyForward` — the same deterministic
+forward the serving engine batches external traffic through — so the
+fitness that promotes a member into the serving ensemble describes
+bit-exactly the policy that serves (``tests/test_serve.py`` pins the
+equality on all four RL algorithms).
+
 The whole thing is one jitted ``vmap`` over members; with a fixed key it is
 bitwise deterministic, which ``tests/test_rollout.py`` asserts.
 """
@@ -17,15 +24,20 @@ import jax
 import jax.numpy as jnp
 
 from repro.envs.core import Env
-from repro.rollout.collector import split_actions
 from repro.rollout.vecenv import VecEnv
+from repro.serve.forward import PolicyForward
 
 
 class Evaluator:
-    def __init__(self, env: Env, policy_fn, *, num_envs: int = 4,
-                 num_steps: int | None = None):
+    def __init__(self, env: Env, policy_fn=None, *, num_envs: int = 4,
+                 num_steps: int | None = None, forward=None):
+        if (policy_fn is None) == (forward is None):
+            raise ValueError("Evaluator takes exactly one of policy_fn "
+                             "(wrapped into a PolicyForward) or forward=")
+        self.forward = forward if forward is not None \
+            else PolicyForward(policy_fn)
+        self.policy_fn = self.forward.policy_fn
         self.venv = VecEnv(env, num_envs)
-        self.policy_fn = policy_fn
         self.num_steps = num_steps or env.spec.episode_length
         self._evaluate = jax.jit(jax.vmap(self._member_eval))
         # size-1 populations skip the member vmap (XLA CPU compiles
@@ -39,10 +51,7 @@ class Evaluator:
 
         def body(carry, _):
             vs, ret, alive = carry
-            # extras-emitting policies (ppo) return (actions, extras) even
-            # on the deterministic key=None path; evaluation needs actions
-            actions, _ = split_actions(self.policy_fn(actor, vs.obs,
-                                                      None, None))
+            actions = self.forward.member(actor, vs.obs)
             vs, trans = self.venv.step(vs, actions)
             ret = ret + trans["reward"] * alive
             # episode END (termination or truncation), not the transition's

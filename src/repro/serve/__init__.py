@@ -1,0 +1,46 @@
+"""``repro.serve`` — population-as-ensemble inference.
+
+The serving counterpart of the training stack: a trained population is an
+ensemble, and the paper's one-compiled-call-for-N-members protocol serves
+it as cheaply as it trained it.
+
+  * :mod:`repro.serve.forward`    — :class:`PolicyForward`, the ONE
+    deterministic policy forward shared (bit-exactly) with the
+    training-time ``repro.rollout.Evaluator``.
+  * :mod:`repro.serve.ensemble`   — :class:`ServingSet` +
+    :func:`select_members`: fitness + DvD-diversity greedy selection of
+    which members earn an inference slot.
+  * :mod:`repro.serve.continuous` — :class:`ContinuousEvaluator`: watch a
+    live checkpoint dir, load only the actor stack (``peek_extra`` +
+    ``"actors"`` aux, no full trainer restore), promote/demote.
+  * :mod:`repro.serve.server`     — :class:`BatchServer`: pad/batch
+    requests, run every member's forward + the mean/vote/best reduction as
+    ONE jitted donated call, ``shard_map``'d over islands when the
+    ensemble outgrows a device.
+
+Worked example (serve what ``launch/train.py`` trained)::
+
+    from repro.checkpoint import CheckpointManager
+    from repro.envs import make
+    from repro.rl import make_agent
+    from repro.serve import (BatchServer, ContinuousEvaluator,
+                             PolicyForward, probe_observations)
+
+    env = make("pendulum")
+    agent = make_agent("td3", env.spec)
+    watcher = ContinuousEvaluator(
+        CheckpointManager("/tmp/repro_ckpt"), agent, size=4,
+        probe_obs=probe_observations(env, jax.random.PRNGKey(0), 32))
+    server = BatchServer(watcher.forward, env.spec, watcher.poll(),
+                         max_batch=256, mode="mean")
+    actions = server.serve(obs_batch)       # one jitted ensemble call
+    watcher.poll(server)                    # promote newer checkpoints
+"""
+from repro.serve.forward import PolicyForward  # noqa: F401
+from repro.serve.ensemble import (  # noqa: F401
+    ServingSet, make_serving_set, select_members,
+)
+from repro.serve.continuous import (  # noqa: F401
+    ContinuousEvaluator, load_actor_stack, probe_observations,
+)
+from repro.serve.server import BatchServer  # noqa: F401

@@ -1,0 +1,138 @@
+"""``ContinuousEvaluator`` — promotion/demotion from live checkpoints.
+
+Training and serving share one artifact: the checkpoint directory that
+``PopTrainer.save`` keeps appending to.  This module is the serving side's
+watcher: every new checkpoint step it reads the cheap JSON extras
+(``CheckpointManager.peek_extra`` — per-member fitness, population size,
+step, no array IO), loads ONLY the stacked actor params (the ``"actors"``
+aux tree, restored against an agent-derived template — never the
+optimizer states, strategy internals or replay buffers, so promotion
+costs actor-bytes, not a full trainer restore), embeds every member's
+behavior on a fixed probe batch, and reselects the serving set by
+fitness + DvD diversity (:func:`repro.serve.ensemble.select_members`).
+
+The promotion policy is deliberately simple and total: the latest
+checkpoint always wins (its params are fresher even when membership is
+unchanged), and membership changes are reported as promote/demote events
+so an operator can audit WHY traffic moved.  Members leave the set only by
+losing their slot to a better candidate — there is no partial update,
+because the selection is a joint (fitness + ensemble-volume) optimum, not
+k independent rankings.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.dvd import behavior_embedding
+from repro.serve.ensemble import ServingSet, make_serving_set, select_members
+from repro.serve.forward import PolicyForward
+
+
+def probe_observations(env, key, size: int = 32):
+    """A fixed batch of reset observations — the shared probe states every
+    member is embedded on (same role as DvD's training-time probes)."""
+    _, obs = jax.vmap(env.reset)(jax.random.split(key, size))
+    return obs
+
+
+def load_actor_stack(manager, agent, *, step: int | None = None):
+    """The stacked actor params + extras of a checkpoint, WITHOUT a full
+    trainer restore: ``peek_extra`` supplies size/fitness/step from JSON,
+    and the ``"actors"`` aux tree restores against a template built from
+    nothing but the agent (``agent.population_init`` shapes the structure;
+    the saved arrays supply the values).  Raises on checkpoints written
+    before ``PopTrainer.save`` recorded actors — serving needs the
+    producer's format, and a silent fallback to a full restore would hide
+    that the cheap path regressed."""
+    step = manager.latest() if step is None else step
+    if step is None:
+        raise FileNotFoundError(
+            f"load_actor_stack: no checkpoint in {manager.dir}")
+    extra = manager.peek_extra(step)
+    n = extra["size"]
+    template = agent.actor_params(
+        agent.population_init(jax.random.PRNGKey(0), n))
+    actors = manager.restore_aux("actors", template, step)
+    if actors is None:
+        raise ValueError(
+            f"checkpoint step {step} in {manager.dir} has no 'actors' aux "
+            f"tree — it was written before PopTrainer.save recorded the "
+            f"serving params; re-save with the current trainer (one "
+            f"trainer.save() call) to make it servable")
+    return jax.tree.map(jnp.asarray, actors), extra
+
+
+class ContinuousEvaluator:
+    """Watches a checkpoint directory and keeps a :class:`ServingSet`
+    promoted from the freshest population.
+
+    ``size`` is the ensemble size; ``probe_obs`` the shared probe batch for
+    behavioral embeddings (None selects on fitness alone);
+    ``diversity_weight`` trades nats of DvD ensemble volume against
+    standard deviations of fitness (0 = pure fitness ranking).
+    """
+
+    def __init__(self, manager, agent, *, size: int = 4, probe_obs=None,
+                 diversity_weight: float = 1.0, length_scale: float = 1.0,
+                 forward: PolicyForward | None = None):
+        self.mgr = manager
+        self.agent = agent
+        self.size = size
+        self.probe_obs = probe_obs
+        self.diversity_weight = diversity_weight
+        self.length_scale = length_scale
+        self.forward = forward if forward is not None \
+            else PolicyForward.for_agent(agent)
+        self.serving: ServingSet | None = None
+        self.events: list[dict] = []
+        self._last_step: int | None = None
+
+    def select(self, actors, fitness) -> np.ndarray:
+        """The promotion criterion on a loaded actor stack: fitness + DvD
+        diversity over probe-behavior embeddings."""
+        n = jax.tree.leaves(actors)[0].shape[0]
+        emb = None
+        if self.probe_obs is not None:
+            emb = np.asarray(behavior_embedding(
+                self.forward.member, actors, self.probe_obs), np.float64)
+        if fitness is None and emb is None:
+            import warnings
+            warnings.warn(
+                "ContinuousEvaluator: checkpoint carries no fitness (saved "
+                "right after an evolve) and no probe_obs was given; "
+                "promoting by member index", stacklevel=2)
+            return np.arange(min(self.size, n), dtype=np.int64)
+        return select_members(fitness, emb, self.size,
+                              diversity_weight=self.diversity_weight,
+                              length_scale=self.length_scale)
+
+    def poll(self, server=None) -> ServingSet | None:
+        """Promote from the latest checkpoint if it is newer than the one
+        currently serving.  Returns the new :class:`ServingSet` (installed
+        into ``server`` when given), or None when nothing changed.  Each
+        membership change is appended to ``self.events`` as
+        ``{"step", "promoted", "demoted", "members"}``."""
+        step = self.mgr.latest()
+        if step is None or step == self._last_step:
+            return None
+        actors, extra = load_actor_stack(self.mgr, self.agent, step=step)
+        fitness = extra["fitness"]
+        members = self.select(actors, fitness)
+        new = make_serving_set(actors, members, step=step, fitness=fitness,
+                               meta={"population": extra["size"]})
+        old = set() if self.serving is None else set(
+            self.serving.members.tolist())
+        now = set(members.tolist())
+        self.events.append({
+            "step": step,
+            "promoted": sorted(now - old),
+            "demoted": sorted(old - now),
+            "members": members.tolist(),
+        })
+        self.serving = new
+        self._last_step = step
+        if server is not None:
+            server.install(new)
+        return new

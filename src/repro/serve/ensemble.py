@@ -1,0 +1,128 @@
+"""``ServingSet`` — which members of a trained population serve traffic.
+
+The population IS the ensemble: training leaves behind N members, and the
+serving engine picks the ``k`` that are worth an inference slot.  Fitness
+alone is the wrong criterion — PBT populations converge, and an ensemble
+of near-clones buys nothing over its best member — so selection follows
+Effective Diversity (DvD, Parker-Holder et al.): maximize fitness PLUS the
+log-determinant volume of the RBF kernel of behavioral embeddings, the
+exact matrix ``repro.core.dvd`` trains with.  Greedy forward selection is
+(provably, by submodularity of log det) near-optimal and runs on host in
+O(k·N) small determinants — this is control-plane math that happens once
+per promotion, never per request.
+
+``ServingSet`` is the immutable result: the chosen member indices, their
+stacked actor params (gathered out of the checkpointed population), the
+fitness that justified them, and which of them is the single best member
+(the ``"best"`` reduction mode's pick).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any
+
+import numpy as np
+
+from repro.core.dvd import rbf_kernel
+
+
+def _logdet(k: np.ndarray) -> float:
+    sign, logdet = np.linalg.slogdet(k)
+    return float(logdet)
+
+
+def select_members(fitness, embeddings, k: int, *,
+                   diversity_weight: float = 1.0,
+                   length_scale: float = 1.0) -> np.ndarray:
+    """Pick ``k`` member indices by fitness + DvD diversity gain.
+
+    ``fitness`` is (N,) or None (a checkpoint written right after an evolve
+    carries none — selection then runs on diversity alone).  ``embeddings``
+    is the (N, E) behavioral-embedding matrix
+    (``repro.core.dvd.behavior_embedding`` on a shared probe batch) or None
+    to select on fitness alone.  Fitness is z-normalized so
+    ``diversity_weight`` trades nats of ensemble volume against standard
+    deviations of fitness, independent of the env's return scale.
+
+    The fittest member is always selected first — whatever the diversity
+    term says, the serving set must contain the best policy we have — and
+    each further slot goes to the candidate maximizing
+    ``z_fitness + diversity_weight * (logdet K[S+c] - logdet K[S])``.
+    """
+    if fitness is None and embeddings is None:
+        raise ValueError("select_members needs fitness and/or embeddings; "
+                         "got neither")
+    n = len(fitness) if fitness is not None else len(embeddings)
+    k = max(1, min(k, n))
+    if fitness is not None:
+        fit = np.asarray(fitness, np.float64)
+        std = fit.std()
+        z = (fit - fit.mean()) / (std if std > 0 else 1.0)
+    else:
+        z = np.zeros((n,))
+    if embeddings is None:
+        return np.argsort(-z, kind="stable")[:k].astype(np.int64)
+
+    emb = np.asarray(embeddings, np.float64)
+    kern = np.asarray(rbf_kernel(emb, length_scale=length_scale))
+    selected = [int(np.argmax(z))]
+    while len(selected) < k:
+        base = _logdet(kern[np.ix_(selected, selected)])
+        best_c, best_score = None, -np.inf
+        for c in range(n):
+            if c in selected:
+                continue
+            trial = selected + [c]
+            gain = _logdet(kern[np.ix_(trial, trial)]) - base
+            score = z[c] + diversity_weight * gain
+            if score > best_score:
+                best_c, best_score = c, score
+        selected.append(best_c)
+    return np.asarray(selected, np.int64)
+
+
+@dataclass(frozen=True)
+class ServingSet:
+    """The members currently serving traffic.
+
+    ``members[i]`` is the checkpoint-population index behind ensemble slot
+    ``i``; ``params`` is the (k,)-stacked actor tree gathered in that
+    order; ``best`` is the slot (not the population index) holding the
+    fittest member, which the ``"best"`` reduction serves.  ``step`` is the
+    checkpoint step the set was promoted from — the serving engine's
+    version number.
+    """
+    step: int
+    members: np.ndarray                 # (k,) population indices
+    params: Any                         # stacked actor pytree, leaves (k, ...)
+    fitness: np.ndarray | None = None   # (k,) fitness per slot, or None
+    best: int = 0                       # slot index of the fittest member
+    meta: dict = field(default_factory=dict)
+
+    @property
+    def size(self) -> int:
+        return len(self.members)
+
+    def describe(self) -> str:
+        fit = ("none" if self.fitness is None
+               else np.asarray(self.fitness).round(2).tolist())
+        return (f"ServingSet(step={self.step}, "
+                f"members={self.members.tolist()}, fitness={fit}, "
+                f"best=slot {self.best})")
+
+
+def make_serving_set(actors, members, *, step: int = -1, fitness=None,
+                     meta=None) -> ServingSet:
+    """Gather ``members`` (population indices) out of a stacked actor tree
+    into a :class:`ServingSet` — the promotion primitive
+    ``ContinuousEvaluator`` and the benchmarks share."""
+    import jax
+
+    members = np.asarray(members, np.int64)
+    params = jax.tree.map(lambda x: x[members], actors)
+    fit = None
+    if fitness is not None:
+        fit = np.asarray(fitness, np.float64)[members]
+    best = 0 if fit is None else int(np.argmax(fit))
+    return ServingSet(step=step, members=members, params=params,
+                      fitness=fit, best=best, meta=dict(meta or {}))

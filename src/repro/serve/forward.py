@@ -1,0 +1,59 @@
+"""``PolicyForward`` — the ONE compiled deterministic policy forward.
+
+Training-time evaluation and serving must agree bit-for-bit on what "the
+policy's action" is, or the fitness that promotes a member into the serving
+ensemble describes a different policy than the one traffic hits.  This
+module pins that down as a tiny object both sides compose:
+
+  * ``repro.rollout.Evaluator`` is env-stepping composed with
+    ``PolicyForward.member`` (one member, one obs batch, inside its eval
+    scan);
+  * ``repro.serve.BatchServer`` is request batching composed with
+    ``PolicyForward.members`` (every ensemble member on the same request
+    batch, inside one jitted call).
+
+The deterministic head is the ``key=None`` path of the exploration-policy
+contract (``policy_fn(actor, obs, key, hypers)``): td3/sac take the mean
+action, dqn goes greedy (epsilon never fires without a key), ppo returns
+the distribution mode and its extras are dropped.  ``tests/test_serve.py``
+asserts the serving forward reproduces the Evaluator's actions bitwise on
+all four algorithms.
+"""
+from __future__ import annotations
+
+import jax
+
+
+class PolicyForward:
+    """A deterministic action function over the exploration-policy contract.
+
+    ``policy_fn(actor_params, obs, key, hypers) -> actions | (actions,
+    extras)`` — the same callable the Collector/Evaluator drive; here it is
+    always called with ``key=None, hypers=None`` (deterministic head,
+    exploration off) and extras are discarded.
+    """
+
+    def __init__(self, policy_fn):
+        self.policy_fn = policy_fn
+
+    def member(self, actor, obs):
+        """One member's deterministic actions on an observation batch."""
+        out = self.policy_fn(actor, obs, None, None)
+        # extras-emitting policies (ppo) return (actions, extras) even on
+        # the deterministic path — same normalization as the Collector's
+        # split_actions, inlined to keep this module import-cycle-free
+        return out[0] if isinstance(out, tuple) else out
+
+    def members(self, actors, obs):
+        """Every member of a stacked param tree on the SAME observation
+        batch -> actions with a leading member axis ``(M, B, ...)`` — the
+        ensemble-inference shape ``BatchServer`` reduces over."""
+        return jax.vmap(self.member, in_axes=(0, None))(actors, obs)
+
+    @classmethod
+    def for_agent(cls, agent) -> "PolicyForward":
+        """The forward for a ``repro.pop`` agent: built from the same
+        exploration module the rollout engine acts with, so serving and
+        training share one policy definition, not two."""
+        from repro.rollout.collector import default_exploration
+        return cls(default_exploration(agent))

@@ -1,0 +1,372 @@
+"""repro.serve acceptance: the serving forward is bit-exact with the
+training-time Evaluator's on all four RL algorithms, the batched ensemble
+call moves no bytes between host and device (transfer_guard), serving-set
+selection obeys its fitness+diversity contract, ContinuousEvaluator
+promotes/demotes from live checkpoints without a trainer restore, the
+strict ``peek_extra`` raises on pre-metadata checkpoints, and the three
+ensemble reductions compute what they claim."""
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager
+from repro.configs.base import PopulationConfig
+from repro.envs import make
+from repro.pop import PopTrainer
+from repro.rl import make_agent
+from repro.rollout import Evaluator
+from repro.rollout.collector import default_exploration
+from repro.serve import (BatchServer, ContinuousEvaluator, PolicyForward,
+                         load_actor_stack, make_serving_set,
+                         probe_observations, select_members)
+
+KEY = jax.random.PRNGKey(0)
+
+ALGO_ENVS = [("td3", "pendulum"), ("sac", "pendulum"),
+             ("dqn", "cartpole"), ("ppo", "pendulum")]
+
+
+def _population(algo, env, n=3, key=KEY):
+    agent = make_agent(algo, env.spec)
+    return agent, agent.actor_params(agent.population_init(key, n))
+
+
+def _td3_server(n=4, max_batch=8, mode="mean", mesh=None, key=KEY):
+    env = make("pendulum")
+    agent, actors = _population("td3", env, n, key)
+    sset = make_serving_set(actors, np.arange(n), step=0,
+                            fitness=np.linspace(0.0, 1.0, n))
+    server = BatchServer(PolicyForward.for_agent(agent), env.spec, sset,
+                         max_batch=max_batch, mode=mode, mesh=mesh)
+    return env, agent, actors, server
+
+
+# ------------------------------------------------- forward == evaluator
+@pytest.mark.parametrize("algo,env_name", ALGO_ENVS)
+def test_policy_forward_matches_evaluator(algo, env_name):
+    """The serving engine's PolicyForward and the Evaluator the training
+    loop scores fitness with produce bit-identical deterministic actions
+    on the same observations (greedy/mean heads; DQN's greedy head ignores
+    epsilon, i.e. epsilon=0).  Promotion fitness therefore describes
+    exactly the policy that serves."""
+    env = make(env_name)
+    agent, actors = _population(algo, env)
+    # the evaluator exactly as RolloutEngine builds it during training
+    ev = Evaluator(env, default_exploration(agent), num_envs=2, num_steps=4)
+    serving = PolicyForward.for_agent(agent)
+
+    # on-trajectory observations (resets) + off-trajectory random ones
+    obs = np.concatenate([
+        np.asarray(probe_observations(env, KEY, 8)),
+        np.asarray(jax.random.normal(KEY, (8, env.spec.obs_dim)))])
+    evaluator_actions = jax.jit(jax.vmap(ev.forward.member,
+                                         in_axes=(0, None)))(actors, obs)
+    serving_actions = jax.jit(serving.members)(actors, obs)
+    np.testing.assert_array_equal(np.asarray(serving_actions),
+                                  np.asarray(evaluator_actions))
+    if env.spec.discrete:
+        assert np.asarray(serving_actions).dtype.kind in "iu"
+
+
+def test_evaluator_forward_composition():
+    """Evaluator accepts a prebuilt PolicyForward and exposes it; passing
+    both or neither of policy_fn/forward is an error."""
+    env = make("pendulum")
+    agent, actors = _population("td3", env)
+    fwd = PolicyForward.for_agent(agent)
+    ev = Evaluator(env, forward=fwd, num_envs=2, num_steps=4)
+    assert ev.forward is fwd and ev.policy_fn is fwd.policy_fn
+    fit = ev.evaluate(actors, KEY)
+    assert np.asarray(fit).shape == (3,)
+    with pytest.raises(ValueError):
+        Evaluator(env, default_exploration(agent), forward=fwd)
+    with pytest.raises(ValueError):
+        Evaluator(env)
+
+
+# ------------------------------------------------------- transfer guard
+def test_ensemble_call_no_host_round_trip():
+    """One jitted donated call serves the whole ensemble: a warm call on a
+    device-resident padded batch runs under transfer_guard('disallow') —
+    no implicit host<->device traffic anywhere in the hot path."""
+    env, _, _, server = _td3_server()
+    server.warmup()
+    obs = server.place_request(np.ones((8, env.spec.obs_dim), np.float32))
+    with jax.transfer_guard("disallow"):
+        acts = server.infer_device(obs)
+        jax.block_until_ready(acts)
+    assert np.asarray(acts).shape == (8, env.spec.act_dim)
+
+
+# ------------------------------------------------------ member selection
+def test_select_members_fittest_always_first():
+    fitness = np.array([0.0, 5.0, 1.0, 2.0])
+    emb = np.eye(4)
+    picked = select_members(fitness, emb, 2)
+    assert picked[0] == 1
+    picked = select_members(fitness, None, 3)
+    assert picked.tolist() == [1, 3, 2]   # pure fitness ranking
+
+
+def test_select_members_prefers_diverse_over_clone():
+    """Equal-ish fitness: the second slot goes to the behaviorally distant
+    member, not the near-clone of the fittest."""
+    fitness = np.array([1.0, 0.99, 0.5])
+    emb = np.array([[0.0, 0.0], [0.01, 0.0], [3.0, 3.0]])
+    picked = select_members(fitness, emb, 2, diversity_weight=5.0)
+    assert picked.tolist() == [0, 2]
+    # diversity off: fitness alone picks the clone
+    picked = select_members(fitness, emb, 2, diversity_weight=0.0)
+    assert picked.tolist() == [0, 1]
+
+
+def test_select_members_edges():
+    fitness = np.array([1.0, 2.0])
+    assert select_members(fitness, None, 10).tolist() == [1, 0]  # k clamped
+    assert len(select_members(None, np.eye(3), 2)) == 2  # diversity alone
+    with pytest.raises(ValueError):
+        select_members(None, None, 2)
+
+
+def test_make_serving_set_gathers_and_ranks():
+    env = make("pendulum")
+    _, actors = _population("td3", env, n=4)
+    sset = make_serving_set(actors, [2, 0], step=7,
+                            fitness=np.array([1.0, 9.0, 3.0, 0.0]))
+    assert sset.size == 2 and sset.step == 7
+    assert sset.fitness.tolist() == [3.0, 1.0]
+    assert sset.best == 0    # slot 0 (population member 2) is fittest
+    lead = jax.tree.leaves(sset.params)[0]
+    ref = jax.tree.leaves(actors)[0]
+    np.testing.assert_array_equal(np.asarray(lead),
+                                  np.asarray(ref[np.array([2, 0])]))
+    assert "step=7" in sset.describe()
+
+
+# ------------------------------------------------------------ reductions
+def test_mean_reduction_matches_member_average():
+    env, agent, actors, server = _td3_server(n=4, max_batch=6)
+    obs = np.asarray(jax.random.normal(KEY, (6, env.spec.obs_dim)),
+                     np.float32)
+    got = server.serve(obs)
+    per_member = jax.jit(server.forward.members)(actors, jnp.asarray(obs))
+    np.testing.assert_allclose(got, np.asarray(per_member).mean(0),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_best_reduction_serves_the_fittest_member():
+    env, agent, actors, server = _td3_server(n=4, max_batch=6, mode="best")
+    assert server.set.best == 3          # fitness = linspace -> last wins
+    obs = np.asarray(jax.random.normal(KEY, (6, env.spec.obs_dim)),
+                     np.float32)
+    got = server.serve(obs)
+    per_member = jax.jit(server.forward.members)(actors, jnp.asarray(obs))
+    np.testing.assert_allclose(got, np.asarray(per_member)[3],
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_vote_reduction_is_member_plurality():
+    env = make("cartpole")
+    agent, actors = _population("dqn", env, n=5)
+    sset = make_serving_set(actors, np.arange(5), step=0)
+    server = BatchServer(PolicyForward.for_agent(agent), env.spec, sset,
+                         max_batch=4, mode="vote")
+    obs = np.asarray(jax.random.normal(KEY, (4, env.spec.obs_dim)),
+                     np.float32)
+    got = server.serve(obs)
+    votes = np.asarray(jax.jit(server.forward.members)(
+        actors, jnp.asarray(obs)))                       # (5, 4) greedy acts
+    expect = [np.bincount(votes[:, b], minlength=env.spec.act_dim).argmax()
+              for b in range(4)]
+    np.testing.assert_array_equal(got, expect)
+
+
+def test_vote_needs_discrete_actions():
+    env = make("pendulum")
+    agent, _ = _population("td3", env)
+    with pytest.raises(ValueError, match="discrete"):
+        BatchServer(PolicyForward.for_agent(agent), env.spec, mode="vote")
+    with pytest.raises(ValueError, match="unknown reduction"):
+        BatchServer(PolicyForward.for_agent(agent), env.spec, mode="median")
+
+
+def test_serve_padding_and_tiling_invariant():
+    """Answers are independent of how requests pack into the fixed batch:
+    a short batch (padded), an exact batch, and an overlong batch (tiled)
+    agree element-wise; a single request round-trips without a batch dim."""
+    env, _, _, server = _td3_server(n=2, max_batch=4)
+    obs = np.asarray(jax.random.normal(KEY, (10, env.spec.obs_dim)),
+                     np.float32)
+    full = server.serve(obs)                       # 4 + 4 + 2(padded)
+    assert full.shape == (10, env.spec.act_dim)
+    np.testing.assert_allclose(server.serve(obs[:3]), full[:3],
+                               rtol=1e-6, atol=1e-6)
+    one = server.serve(obs[0])
+    assert one.shape == (env.spec.act_dim,)
+    np.testing.assert_allclose(one, full[0], rtol=1e-6, atol=1e-6)
+    assert server.requests_served == 10 + 3 + 1
+
+
+def test_submit_flush_queue():
+    env, _, _, server = _td3_server(n=2, max_batch=3)
+    obs = np.asarray(jax.random.normal(KEY, (3, env.spec.obs_dim)),
+                     np.float32)
+    slots = [server.submit(o) for o in obs]
+    assert slots == [0, 1, 2]
+    with pytest.raises(ValueError, match="queue full"):
+        server.submit(obs[0])
+    np.testing.assert_allclose(server.flush(), server.serve(obs),
+                               rtol=1e-6, atol=1e-6)
+    assert server.flush().shape == (0,)            # empty queue
+
+    unset = BatchServer(server.forward, env.spec, max_batch=3)
+    with pytest.raises(ValueError, match="no ServingSet"):
+        unset.serve(obs)
+
+
+# ------------------------------------------- continuous promotion
+def _tiny_trainer(tmp_path, env, n=4):
+    agent = make_agent("td3", env.spec)
+    pcfg = PopulationConfig(size=n, strategy="none", donate=False)
+    return agent, PopTrainer(agent, pcfg, seed=0,
+                             checkpoint_dir=str(tmp_path))
+
+
+def test_continuous_evaluator_promotes_and_demotes(tmp_path):
+    env = make("pendulum")
+    agent, trainer = _tiny_trainer(tmp_path, env)
+    trainer.step_count = 1
+    trainer.report_fitness(np.array([9.0, 8.0, 0.0, 1.0]))
+    trainer.save(blocking=True)
+
+    watcher = ContinuousEvaluator(trainer._mgr, agent, size=2,
+                                  diversity_weight=0.0)   # fitness-only
+    sset = watcher.poll()
+    assert sset is not None and sset.step == 0
+    assert sorted(sset.members.tolist()) == [0, 1]
+    assert watcher.poll() is None                  # unchanged checkpoint
+
+    # training continues: fitness order flips, a newer checkpoint lands
+    # (values dominate the first report — trainer.fitness() is the mean of
+    # the live window, not just the latest entry)
+    trainer.step_count = 11
+    trainer.report_fitness(np.array([0.0, 1.0, 99.0, 88.0]))
+    trainer.save(blocking=True)
+    server_env, _, _, server = _td3_server(n=2, max_batch=4)
+    newer = watcher.poll(server)
+    assert newer is not None and newer.step == 10
+    assert sorted(newer.members.tolist()) == [2, 3]
+    ev = watcher.events[-1]
+    assert sorted(ev["promoted"]) == [2, 3]
+    assert sorted(ev["demoted"]) == [0, 1]
+    assert server.set is newer                     # installed into server
+    server.serve(np.zeros((4, env.spec.obs_dim), np.float32))
+
+
+def test_promoted_params_match_checkpointed_actors(tmp_path):
+    """load_actor_stack restores the exact actor arrays the trainer saved —
+    no trainer restore, bit-identical params, so a promoted member's
+    serving actions ARE its training-time evaluation actions."""
+    env = make("pendulum")
+    agent, trainer = _tiny_trainer(tmp_path, env)
+    trainer.step_count = 1
+    trainer.report_fitness(np.array([1.0, 2.0, 3.0, 0.0]))
+    trainer.save(blocking=True)
+
+    actors, extra = load_actor_stack(trainer._mgr, agent)
+    assert extra["size"] == 4 and extra["fitness"][2] == 3.0
+    for got, ref in zip(jax.tree.leaves(actors),
+                        jax.tree.leaves(trainer.actors)):
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
+
+    fwd = PolicyForward.for_agent(agent)
+    obs = np.asarray(probe_observations(env, KEY, 8))
+    np.testing.assert_array_equal(
+        np.asarray(jax.jit(fwd.members)(actors, obs)),
+        np.asarray(jax.jit(fwd.members)(trainer.actors, obs)))
+
+
+def test_promotion_without_fitness_uses_probes(tmp_path):
+    """A checkpoint saved right after an evolve carries fitness=None; with
+    probe observations the watcher still promotes (diversity alone), and
+    with neither it falls back to by-index promotion, loudly."""
+    env = make("pendulum")
+    agent, trainer = _tiny_trainer(tmp_path, env)
+    trainer.step_count = 1
+    trainer.save(blocking=True)                    # empty fitness window
+    assert trainer._mgr.peek_extra()["fitness"] is None
+
+    probes = probe_observations(env, KEY, 8)
+    sset = ContinuousEvaluator(trainer._mgr, agent, size=2,
+                               probe_obs=probes).poll()
+    assert sset.size == 2 and sset.fitness is None
+
+    blind = ContinuousEvaluator(trainer._mgr, agent, size=2)
+    with pytest.warns(UserWarning, match="promoting by member index"):
+        sset = blind.poll()
+    assert sset.members.tolist() == [0, 1]
+
+
+# ---------------------------------------------------- strict peek_extra
+def test_peek_extra_strict_on_legacy_checkpoints(tmp_path):
+    """A checkpoint lacking the size/fitness extras (pre-PR-3 producer)
+    raises a clear KeyError instead of returning a partial dict;
+    require=() is the raw-read escape hatch.  An empty dir stays None."""
+    mgr = CheckpointManager(str(tmp_path))
+    assert mgr.peek_extra() is None
+    mgr.save(3, {"w": np.zeros(2)}, extra={"loss": 1.5})
+    with pytest.raises(KeyError, match="lacks extras.*size"):
+        mgr.peek_extra()
+    raw = mgr.peek_extra(require=())
+    assert raw["loss"] == 1.5 and raw["step"] == 3
+
+
+def test_load_actor_stack_rejects_unservable_checkpoint(tmp_path):
+    """A checkpoint with extras but no 'actors' aux tree (a producer that
+    never recorded serving params) is rejected with guidance, and an empty
+    dir raises FileNotFoundError."""
+    env = make("pendulum")
+    agent = make_agent("td3", env.spec)
+    mgr = CheckpointManager(str(tmp_path))
+    with pytest.raises(FileNotFoundError, match="no checkpoint"):
+        load_actor_stack(mgr, agent)
+    mgr.save(0, {"w": np.zeros(2)},
+             extra={"size": 2, "fitness": None})
+    with pytest.raises(ValueError, match="no 'actors' aux"):
+        load_actor_stack(mgr, agent)
+
+
+# ------------------------------------------------------------- islands
+@pytest.mark.skipif(len(jax.devices()) < 2,
+                    reason="islands serving needs >1 device")
+def test_islands_mesh_matches_single_device():
+    from repro.elastic import plan_layout
+    n = 4
+    mesh = plan_layout(len(jax.devices()), n).mesh
+    env, agent, actors, plain = _td3_server(n=n, max_batch=4)
+    _, _, _, sharded = _td3_server(n=n, max_batch=4, mesh=mesh)
+    obs = np.asarray(jax.random.normal(KEY, (4, env.spec.obs_dim)),
+                     np.float32)
+    np.testing.assert_allclose(sharded.serve(obs), plain.serve(obs),
+                               rtol=1e-5, atol=1e-5)
+    # the sharded call is still one program with no implicit transfers:
+    # place_request replicates the batch over the mesh explicitly
+    ready = sharded.place_request(obs)
+    with jax.transfer_guard("disallow"):
+        jax.block_until_ready(sharded.infer_device(ready))
+    # an ensemble the mesh cannot tile is rejected at install time
+    islands = mesh.shape["pop"]
+    if islands > 1:
+        bad = make_serving_set(actors, np.arange(islands + 1))
+        with pytest.raises(ValueError, match="does not split"):
+            sharded.install(bad)
+
+
+def test_warmup_silences_donation_note(recwarn):
+    _, _, _, server = _td3_server(n=2, max_batch=4)
+    server.warmup()
+    assert not [w for w in recwarn.list
+                if "donated buffers" in str(w.message)]
