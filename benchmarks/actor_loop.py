@@ -34,13 +34,12 @@ minimal-overhead claim), and the fused-over-unfused speedup.
 (same row schema for both algos).
 """
 import argparse
-import json
 import time
 
 import jax
 import numpy as np
 
-from benchmarks.common import emit
+from benchmarks.common import emit, write_rows
 from repro.configs.base import PopulationConfig
 from repro.data import buffer_add, buffer_sample
 from repro.envs import make
@@ -234,9 +233,7 @@ def run(pop_sizes=(1, 2, 4, 8, 16), algos=("td3", "ppo"), num_envs=1,
                                        "rel_to_pop1", "fused_speedup",
                                        "single_jit")])
     if json_path:
-        with open(json_path, "w") as f:
-            json.dump(rows, f, indent=2)
-        print(f"wrote {json_path}")
+        write_rows(rows, json_path)
     return rows
 
 

@@ -37,3 +37,17 @@ def td3_batch(key, n, b=256, obs=17, act=6):
 
 def emit(row):
     print(",".join(str(x) for x in row), flush=True)
+
+
+def write_rows(rows, path):
+    """Persist benchmark result rows as JSONL in the telemetry row schema
+    (``kind="bench"``, stamped ``t``) — the SAME format ``launch/train.py``
+    run logs use, so ``tools/report.py --check`` validates CI's benchmark
+    artifacts and training telemetry with one loader, and trend tooling
+    reads both with one parser."""
+    from repro.telemetry import JSONLSink
+
+    with JSONLSink(path, strict=True) as sink:
+        for row in rows:
+            sink.write(dict(row, kind="bench"))
+    print(f"wrote {path} ({len(rows)} rows)")

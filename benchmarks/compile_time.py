@@ -19,7 +19,6 @@ Two arms:
 ``actor_loop`` / ``serve_throughput``.
 """
 import argparse
-import json
 import os
 import subprocess
 import sys
@@ -29,7 +28,7 @@ import time
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import emit, td3_batch
+from benchmarks.common import emit, td3_batch, write_rows
 from repro.core import population_init, vectorized_update
 from repro.rl import td3, sac
 
@@ -129,6 +128,4 @@ if __name__ == "__main__":
     rows = (run_restart(n=n, num_steps=num_steps, cache_dir=args.cache_dir)
             if args.restart else run(n=n, num_steps=num_steps))
     if args.json:
-        with open(args.json, "w") as f:
-            json.dump(rows, f, indent=2)
-        print(f"wrote {args.json}")
+        write_rows(rows, args.json)

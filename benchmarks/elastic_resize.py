@@ -18,14 +18,13 @@ PATH`` dumps rows for trend tracking next to ``actor_loop`` /
 ``population_update``.
 """
 import argparse
-import json
 import shutil
 import tempfile
 import time
 
 import jax
 
-from benchmarks.common import emit
+from benchmarks.common import emit, write_rows
 from repro.configs.base import HyperSpace, PopulationConfig
 from repro.elastic import restore_elastic
 from repro.envs import make
@@ -97,9 +96,7 @@ def run(pop_sizes=(2, 4, 8), backend="vectorized",
             rows.append(row)
             emit([row[c] for c in cols])
     if json_path:
-        with open(json_path, "w") as f:
-            json.dump(rows, f, indent=2)
-        print(f"wrote {json_path}")
+        write_rows(rows, json_path)
     return rows
 
 

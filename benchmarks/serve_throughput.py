@@ -20,13 +20,12 @@ same JSON-artifact style as ``actor_loop`` / ``elastic_resize`` for trend
 tracking.
 """
 import argparse
-import json
 import time
 
 import jax
 import numpy as np
 
-from benchmarks.common import emit
+from benchmarks.common import emit, write_rows
 from repro.envs import make
 from repro.pop import ModuleAgent
 from repro.rl import td3
@@ -119,9 +118,7 @@ def run(pop_sizes=(1, 2, 4, 8, 16), batch_sizes=(1, 32, 256), mode="mean",
                 rows.append(row)
                 emit([row[k] for k in FIELDS])
     if json_path:
-        with open(json_path, "w") as f:
-            json.dump(rows, f, indent=2)
-        print(f"wrote {json_path}")
+        write_rows(rows, json_path)
     return rows
 
 

@@ -25,10 +25,11 @@ import jax.numpy as jnp
 from repro.configs.base import PopulationConfig
 from repro.envs import make
 from repro.pop import PopTrainer, SharedCriticAgent
+from repro.telemetry import make_telemetry
 
 
 def run(population=10, iters=20, rl_steps=64, collect_steps=100,
-        strategy="cem", backend="vectorized", seed=0):
+        strategy="cem", backend="vectorized", seed=0, log_dir=None):
     env = make("pendulum")
     obs_dim, act_dim = env.spec.obs_dim, env.spec.act_dim
     n = population
@@ -40,8 +41,11 @@ def run(population=10, iters=20, rl_steps=64, collect_steps=100,
                             num_steps=rl_steps, pbt_interval=1,
                             elite_frac=0.5, sigma_init=1e-2,
                             fitness_window=1)
+    telemetry = make_telemetry(log_dir, console_every=1,
+                               meta={"example": "cemrl", "population": n,
+                                     "strategy": strategy})
     trainer = PopTrainer(SharedCriticAgent(obs_dim, act_dim, train_frac=0.5),
-                         pcfg, seed=seed)
+                         pcfg, seed=seed, telemetry=telemetry)
     trainer.attach_rollout(env, num_envs=2, collect_steps=collect_steps,
                            batch_size=128, buffer_capacity=50_000,
                            eval_envs=2)
@@ -51,14 +55,17 @@ def run(population=10, iters=20, rl_steps=64, collect_steps=100,
 
     def on_iter(it, metrics, stats, fitness, lineage):
         result["mean"] = float(jnp.mean(fitness))
-        sigma = float(jnp.mean(trainer.strategy.cem_state.var)) \
-            if strategy == "cem" else float("nan")
-        print(f"iter {it + 1}: mean fitness {result['mean']:+.2f} "
-              f"best {float(fitness.max()):+.2f} "
-              f"sigma {sigma:.2e} "
-              f"({time.time() - t0:.1f}s)", flush=True)
+        if strategy == "cem":
+            # distribution contraction — CEM's own health signal, emitted
+            # as an example-specific row through the same pipe
+            telemetry.record(
+                "cem", step=it + 1,
+                sigma=float(jnp.mean(trainer.strategy.cem_state.var)))
 
     trainer.run_env_loop(iters, eval_every=1, on_iter=on_iter)
+    telemetry.record("run_end", mean_fitness=result["mean"],
+                     secs=round(time.time() - t0, 2))
+    telemetry.close()
     return result["mean"]
 
 
@@ -69,6 +76,8 @@ if __name__ == "__main__":
     ap.add_argument("--strategy", default="cem", choices=["cem", "pbt", "none"])
     ap.add_argument("--backend", default="vectorized",
                     choices=["vectorized", "sequential"])
+    ap.add_argument("--log-dir", default=None,
+                    help="also write DIR/telemetry.jsonl (tools/report.py)")
     args = ap.parse_args()
     run(population=args.population, iters=args.iters,
-        strategy=args.strategy, backend=args.backend)
+        strategy=args.strategy, backend=args.backend, log_dir=args.log_dir)

@@ -22,10 +22,11 @@ from repro.core.dvd import behavior_embedding, dvd_loss
 from repro.envs import make
 from repro.pop import PopTrainer, SharedCriticAgent
 from repro.rl import networks as nets
+from repro.telemetry import make_telemetry
 
 
 def run(population=5, iters=20, collect_steps=100, updates_per_iter=32,
-        strategy="dvd", seed=0):
+        strategy="dvd", seed=0, log_dir=None):
     env = make("reacher")  # multi-goal env where diversity matters
     obs_dim, act_dim = env.spec.obs_dim, env.spec.act_dim
     n = population
@@ -33,7 +34,11 @@ def run(population=5, iters=20, collect_steps=100, updates_per_iter=32,
     pcfg = PopulationConfig(size=n, strategy=strategy, dvd_period=400,
                             num_steps=updates_per_iter, pbt_interval=1,
                             exploit_frac=0.2, fitness_window=1)
-    trainer = PopTrainer(SharedCriticAgent(obs_dim, act_dim), pcfg, seed=seed)
+    telemetry = make_telemetry(log_dir, console_every=1,
+                               meta={"example": "dvd", "population": n,
+                                     "strategy": strategy})
+    trainer = PopTrainer(SharedCriticAgent(obs_dim, act_dim), pcfg, seed=seed,
+                         telemetry=telemetry)
     engine = trainer.attach_rollout(env, num_envs=2,
                                     collect_steps=collect_steps,
                                     batch_size=128, buffer_capacity=50_000,
@@ -49,11 +54,15 @@ def run(population=5, iters=20, collect_steps=100, updates_per_iter=32,
         result["best"] = float(fitness.max())
         probe = engine.probe_obs(kp, 20)
         emb = behavior_embedding(nets.actor_apply, trainer.actors, probe)
-        print(f"iter {it + 1}: best fitness {result['best']:+.2f} "
-              f"diversity {-float(dvd_loss(emb)):.3f} "
-              f"({time.time() - t0:.1f}s)", flush=True)
+        # the §5.3 diagnostic: ensemble volume of the probe behaviors,
+        # an example-specific row through the shared pipe
+        telemetry.record("diversity", step=it + 1,
+                         logdet=-dvd_loss(emb))
 
     trainer.run_env_loop(iters, eval_every=1, on_iter=on_iter)
+    telemetry.record("run_end", best_fitness=result["best"],
+                     secs=round(time.time() - t0, 2))
+    telemetry.close()
     return result["best"]
 
 
@@ -62,5 +71,8 @@ if __name__ == "__main__":
     ap.add_argument("--population", type=int, default=5)
     ap.add_argument("--iters", type=int, default=20)
     ap.add_argument("--strategy", default="dvd", choices=["dvd", "pbt", "none"])
+    ap.add_argument("--log-dir", default=None,
+                    help="also write DIR/telemetry.jsonl (tools/report.py)")
     args = ap.parse_args()
-    run(population=args.population, iters=args.iters, strategy=args.strategy)
+    run(population=args.population, iters=args.iters, strategy=args.strategy,
+        log_dir=args.log_dir)

@@ -23,6 +23,7 @@ import numpy as np
 from repro.configs.base import HyperSpace, PopulationConfig
 from repro.envs import make
 from repro.pop import PopTrainer, PPOAgent
+from repro.telemetry import make_telemetry
 
 SPACE = HyperSpace(
     log_uniform=(("lr", 1e-5, 1e-3),),
@@ -32,7 +33,8 @@ SPACE = HyperSpace(
 
 def run(population=8, iters=40, num_envs=8, collect_steps=64,
         epochs=4, batch_size=128, pbt_every=5, backend="vectorized",
-        env_name="pendulum", ckpt_dir="/tmp/pbt_ppo_ckpt", seed=0):
+        env_name="pendulum", ckpt_dir="/tmp/pbt_ppo_ckpt", seed=0,
+        log_dir=None):
     env = make(env_name)
     n = population
     pcfg = PopulationConfig(
@@ -41,7 +43,13 @@ def run(population=8, iters=40, num_envs=8, collect_steps=64,
         donate=False)  # async checkpoints read the state
     agent = PPOAgent(env.spec.obs_dim, env.spec.act_dim,
                      discrete=env.spec.discrete)
-    trainer = PopTrainer(agent, pcfg, seed=seed, checkpoint_dir=ckpt_dir)
+    # iter rows carry the PPO metrics (approx_kl included); the console
+    # sink is the one formatting path, --log-dir keeps the JSONL record
+    telemetry = make_telemetry(log_dir, console_every=10,
+                               meta={"example": "pbt_ppo", "population": n,
+                                     "env": env_name, "backend": backend})
+    trainer = PopTrainer(agent, pcfg, seed=seed, checkpoint_dir=ckpt_dir,
+                         telemetry=telemetry)
     # on-policy knobs: each iteration consumes the whole fresh rollout of
     # collect_steps x num_envs transitions as epochs x minibatches
     trainer.attach_rollout(env, num_envs=num_envs,
@@ -54,24 +62,18 @@ def run(population=8, iters=40, num_envs=8, collect_steps=64,
     def on_iter(it, metrics, stats, fitness, lineage):
         if fitness is not None:
             last["fitness"] = fitness
-        if lineage is not None:
-            fit = trainer.last_fitness
-            print(f"[pbt] iter {it + 1} fitness best={float(fit.max()):+.1f} "
-                  f"parents={np.asarray(lineage)}")
         if (it + 1) % 10 == 0:
             trainer.save()
-            kl = float(np.asarray(metrics["approx_kl"]).mean())
-            print(f"iter {it + 1}: best fitness "
-                  f"{float(last['fitness'].max()):+.2f} "
-                  f"mean {float(last['fitness'].mean()):+.2f} "
-                  f"kl {kl:+.4f} ({time.time() - t0:.1f}s)", flush=True)
 
     trainer.run_env_loop(iters, eval_every=1, on_iter=on_iter)
     trainer.wait()
     if last["fitness"] is None:
         last["fitness"] = np.asarray(trainer.evaluate_fitness())
     best = float(np.max(last["fitness"]))
-    print(f"done: best final fitness {best:+.2f} in {time.time() - t0:.1f}s")
+    telemetry.record("run_end", best_fitness=best,
+                     secs=round(time.time() - t0, 2),
+                     compiles=telemetry.compile_count)
+    telemetry.close()
     return best
 
 
@@ -85,6 +87,8 @@ if __name__ == "__main__":
     ap.add_argument("--backend", default="vectorized",
                     choices=["vectorized", "sequential", "sharded",
                              "islands"])
+    ap.add_argument("--log-dir", default=None,
+                    help="also write DIR/telemetry.jsonl (tools/report.py)")
     args = ap.parse_args()
     run(population=args.population, iters=args.iters, env_name=args.env,
-        backend=args.backend)
+        backend=args.backend, log_dir=args.log_dir)

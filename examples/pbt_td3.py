@@ -22,6 +22,7 @@ from repro.configs.base import HyperSpace, PopulationConfig
 from repro.envs import make
 from repro.pop import ModuleAgent, PopTrainer
 from repro.rl import td3
+from repro.telemetry import make_telemetry
 
 # "noise" is TD3's target-policy-smoothing sigma (update side);
 # "explore_noise" drives the Collector's acting-time gaussian — separate
@@ -34,15 +35,23 @@ SPACE = HyperSpace(
 
 def run(population=8, iters=30, num_envs=4, collect_steps=32,
         updates_per_iter=64, batch_size=128, pbt_every=10,
-        backend="vectorized", ckpt_dir="/tmp/pbt_td3_ckpt", seed=0):
+        backend="vectorized", ckpt_dir="/tmp/pbt_td3_ckpt", seed=0,
+        log_dir=None):
     env = make("pendulum")
     n = population
     pcfg = PopulationConfig(
         size=n, strategy="pbt", backend=backend, num_steps=updates_per_iter,
         pbt_interval=pbt_every, exploit_frac=0.3, hyper_space=SPACE,
         fitness_window=5, donate=False)  # async checkpoints read the state
+    # evolve / members / ckpt rows print through the one console
+    # formatting path; --log-dir additionally writes the JSONL record
+    # tools/report.py replays into the full family tree
+    telemetry = make_telemetry(log_dir, console_every=5,
+                               meta={"example": "pbt_td3", "population": n,
+                                     "backend": backend})
     trainer = PopTrainer(ModuleAgent(td3, env.spec.obs_dim, env.spec.act_dim),
-                         pcfg, seed=seed, checkpoint_dir=ckpt_dir)
+                         pcfg, seed=seed, checkpoint_dir=ckpt_dir,
+                         telemetry=telemetry)
     trainer.attach_rollout(env, num_envs=num_envs,
                            collect_steps=collect_steps,
                            batch_size=batch_size, buffer_capacity=20_000,
@@ -54,17 +63,8 @@ def run(population=8, iters=30, num_envs=4, collect_steps=32,
     def on_iter(it, metrics, stats, fitness, lineage):
         if fitness is not None:
             last["fitness"] = fitness
-        if lineage is not None:
-            fit = trainer.last_fitness
-            print(f"[pbt] iter {it + 1} fitness best={float(fit.max()):+.1f} "
-                  f"parents={np.asarray(lineage)}")
         if (it + 1) % 10 == 0:
             trainer.save()
-            print(f"iter {it + 1}: best fitness "
-                  f"{float(last['fitness'].max()):+.2f} "
-                  f"mean {float(last['fitness'].mean()):+.2f} "
-                  f"episodes {int(np.asarray(stats['episodes']).sum())} "
-                  f"({time.time() - t0:.1f}s)", flush=True)
 
     # eval_every=2 with fitness_window=5 and pbt_interval=10: exactly the
     # five evals PBT will consume land in the window each evolve cycle —
@@ -74,7 +74,10 @@ def run(population=8, iters=30, num_envs=4, collect_steps=32,
     if last["fitness"] is None:  # iters < eval_every: score the pop now
         last["fitness"] = np.asarray(trainer.evaluate_fitness())
     best = float(np.max(last["fitness"]))
-    print(f"done: best final fitness {best:+.2f} in {time.time() - t0:.1f}s")
+    telemetry.record("run_end", best_fitness=best,
+                     secs=round(time.time() - t0, 2),
+                     compiles=telemetry.compile_count)
+    telemetry.close()
     return best
 
 
@@ -85,5 +88,8 @@ if __name__ == "__main__":
     ap.add_argument("--backend", default="vectorized",
                     choices=["vectorized", "sequential", "sharded",
                              "islands"])
+    ap.add_argument("--log-dir", default=None,
+                    help="also write DIR/telemetry.jsonl (tools/report.py)")
     args = ap.parse_args()
-    run(population=args.population, iters=args.iters, backend=args.backend)
+    run(population=args.population, iters=args.iters, backend=args.backend,
+        log_dir=args.log_dir)

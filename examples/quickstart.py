@@ -15,6 +15,7 @@ from repro.configs.base import HyperSpace, PopulationConfig
 from repro.envs import make, rollout
 from repro.pop import ModuleAgent, PopTrainer
 from repro.rl import td3
+from repro.telemetry import ConsoleSink, RunTelemetry
 
 N = 8
 env = make("pendulum")
@@ -27,9 +28,12 @@ pcfg = PopulationConfig(
                                         ("critic_lr", 3e-5, 3e-3))))
 
 # 2. the trainer stacks the population, samples per-member hypers, and
-#    compiles ONE update for every member (the paper's Fig. 1, right)
+#    compiles ONE update for every member (the paper's Fig. 1, right);
+#    telemetry formats every iteration — note the loop below never calls
+#    float() on device values, the sink's thread fetches them
+telemetry = RunTelemetry(ConsoleSink(every=1), meta={"example": "quickstart"})
 trainer = PopTrainer(ModuleAgent(td3, env.spec.obs_dim, env.spec.act_dim),
-                     pcfg, seed=0)
+                     pcfg, seed=0, telemetry=telemetry)
 
 # 3. data collection vectorizes over the population too
 collect = jax.jit(lambda actors, keys: jax.vmap(
@@ -41,7 +45,6 @@ for it in range(10):
     batch = jax.tree.map(lambda x: x[:, -256:], traj)
     returns = traj["reward"].sum(-1)
     metrics, lineage = trainer.step(batch, fitness=returns)
-    print(f"iter {it}: mean reward {float(traj['reward'].mean()):+.3f} "
-          f"critic loss {float(metrics['critic_loss'].mean()):.3f}"
-          + (f" [evolved: parents={lineage}]" if lineage is not None else ""))
+    telemetry.record("rollout", step=it, mean_reward=traj["reward"].mean())
+telemetry.close()
 print("OK — 8 agents trained in one vectorized stream")

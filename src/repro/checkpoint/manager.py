@@ -102,10 +102,16 @@ def load_extra(path: str | Path) -> dict:
 
 
 class CheckpointManager:
-    def __init__(self, directory: str | Path, *, keep: int = 3):
+    def __init__(self, directory: str | Path, *, keep: int = 3,
+                 run_meta: dict | None = None):
         self.dir = Path(directory)
         self.dir.mkdir(parents=True, exist_ok=True)
         self.keep = keep
+        # run-metadata header: merged into every checkpoint's JSON extras
+        # under "run" (run_id, log path, ...) so a checkpoint can be joined
+        # back to the telemetry stream that recorded its training — set at
+        # construction or later (PopTrainer stamps its RunTelemetry id)
+        self.run_meta = dict(run_meta) if run_meta else None
         self._thread: threading.Thread | None = None
 
     def _ckpt_path(self, step: int) -> Path:
@@ -128,8 +134,10 @@ class CheckpointManager:
 
     def save(self, step: int, tree: Any, extra: dict | None = None,
              aux: dict[str, Any] | None = None):
-        save_pytree(self._ckpt_path(step), tree,
-                    dict(extra or {}, step=step), aux=aux)
+        extra = dict(extra or {}, step=step)
+        if self.run_meta is not None:
+            extra.setdefault("run", self.run_meta)
+        save_pytree(self._ckpt_path(step), tree, extra, aux=aux)
         self._gc()
 
     def save_async(self, step: int, tree: Any, extra: dict | None = None,

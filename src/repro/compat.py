@@ -64,6 +64,44 @@ def make_mesh(axis_shapes, axis_names, *, explicit: bool = False):
                          axis_types=(kind,) * len(axis_names))
 
 
+def register_compile_listener(callback):
+    """Invoke ``callback(event_name, seconds)`` for every XLA backend
+    compilation in this process — the hook ``repro.telemetry`` uses to
+    count and time recompiles (first-step warmup, elastic resizes, serving
+    promotions of a new ensemble size).
+
+    Rides ``jax.monitoring``'s duration events, filtering to the actual
+    backend compile (ignoring the trace/lowering sub-events, which fire
+    per jaxpr and would triple-count).  Returns an *unregister* callable,
+    or None when this jax has no monitoring surface — callers treat
+    compile telemetry as best-effort either way.  Unregistration goes
+    through the private ``jax._src.monitoring`` API when the public one
+    (newer jax) is absent; failure to unregister leaves a listener whose
+    callback is a no-op after ``RunTelemetry.close``, which is harmless.
+    """
+    try:
+        from jax import monitoring
+    except ImportError:
+        return None
+    if not hasattr(monitoring, "register_event_duration_secs_listener"):
+        return None
+
+    def _listener(event, duration, **kwargs):
+        if event.endswith("backend_compile_duration"):
+            callback(event, duration)
+
+    monitoring.register_event_duration_secs_listener(_listener)
+
+    def _unregister():
+        try:
+            from jax._src import monitoring as _mi
+            _mi._unregister_event_duration_listener_by_callback(_listener)
+        except Exception:
+            pass
+
+    return _unregister
+
+
 def enable_compilation_cache(path) -> bool:
     """Point jax's persistent compilation cache at ``path`` (created if
     missing), so a process restart reuses yesterday's XLA executables

@@ -32,6 +32,7 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.models import lm as lm_mod
+from repro.telemetry import make_telemetry
 
 
 def generate(cfg, params, prompt_tokens, *, steps: int, max_len: int,
@@ -78,6 +79,11 @@ def _serve_rl(args):
 
     env = make(args.env)
     agent = make_agent(args.algo, env.spec)
+    telemetry = make_telemetry(
+        args.log_dir, console=False,
+        meta={"workload": "serve-rl", "algo": args.algo, "env": args.env,
+              "mode": args.mode, "ensemble": args.ensemble,
+              "batch": args.batch})
     mgr = CheckpointManager(args.ckpt_dir)
     if mgr.latest() is None:
         raise FileNotFoundError(
@@ -90,7 +96,7 @@ def _serve_rl(args):
     watcher = ContinuousEvaluator(
         mgr, agent, size=args.ensemble,
         probe_obs=probe_observations(env, kp, args.probe),
-        diversity_weight=args.diversity_weight)
+        diversity_weight=args.diversity_weight, telemetry=telemetry)
     sset = watcher.poll()
 
     mesh = None
@@ -99,7 +105,9 @@ def _serve_rl(args):
         mesh = plan_layout(len(jax.devices()), sset.size).mesh
         print(f"[serve] islands mesh over {len(jax.devices())} devices")
     server = BatchServer(watcher.forward, env.spec, sset,
-                         max_batch=args.batch, mode=args.mode, mesh=mesh)
+                         max_batch=args.batch, mode=args.mode, mesh=mesh,
+                         telemetry=telemetry,
+                         telemetry_every=args.telemetry_every)
     print(f"[serve] algo={args.algo} env={args.env} mode={args.mode} "
           f"batch={args.batch} {sset.describe()}")
 
@@ -114,13 +122,17 @@ def _serve_rl(args):
     lat = []
     t0 = time.time()
     for i in range(args.requests):
+        telemetry.tick_profile(i, args.profile, iters=args.profile_iters)
         key, kr = jax.random.split(key)
         obs = _request_batch(kr)
         t1 = time.perf_counter()
         actions = server.serve(obs)
         lat.append(time.perf_counter() - t1)
         if args.poll_every and (i + 1) % args.poll_every == 0:
-            newer = watcher.poll(server)
+            # a promotion of a new ensemble SIZE recompiles the serving
+            # executable once — attribute those compile rows to it
+            with telemetry.compile_scope("promotion"):
+                newer = watcher.poll(server)
             if newer is not None:
                 ev = watcher.events[-1]
                 print(f"[serve] promoted step {newer.step}: "
@@ -132,6 +144,12 @@ def _serve_rl(args):
           f"({served / dt:.0f} req/s, p50 {np.percentile(lat_ms, 50):.2f} ms"
           f" p99 {np.percentile(lat_ms, 99):.2f} ms per batch)")
     print(f"[serve] last actions[:2] = {np.asarray(actions)[:2]}")
+    server.report_telemetry()            # flush the partial tail window
+    telemetry.record("run_end", requests=served, secs=round(dt, 4),
+                     req_per_s=round(served / dt, 2),
+                     compiles=telemetry.compile_count,
+                     compile_secs=round(telemetry.compile_secs, 4))
+    telemetry.close()
     return served / dt
 
 
@@ -171,6 +189,18 @@ def main(argv=None):
     ap.add_argument("--compile-cache", default=None, metavar="DIR",
                     help="persistent jax compilation cache directory "
                     "(share it with launch/train.py)")
+    ap.add_argument("--log-dir", default=None, metavar="DIR",
+                    help="write structured telemetry (latency histogram, "
+                    "promotion audit trail, compile events) to "
+                    "DIR/telemetry.jsonl; inspect with tools/report.py")
+    ap.add_argument("--telemetry-every", type=int, default=16,
+                    help="summarize the serving latency window into one "
+                    "telemetry row every N served batches")
+    ap.add_argument("--profile", default=None, metavar="DIR",
+                    help="capture a jax.profiler trace of a few steady-"
+                    "state request batches into DIR")
+    ap.add_argument("--profile-iters", type=int, default=3,
+                    help="request batches to keep the profiler trace open")
     args = ap.parse_args(argv)
 
     if (args.arch is None) == (args.algo is None):
@@ -184,19 +214,31 @@ def main(argv=None):
     cfg = get_config(args.arch)
     if args.smoke:
         cfg = cfg.smoke()
+    telemetry = make_telemetry(
+        args.log_dir, console=False,
+        meta={"workload": "serve-lm", "arch": cfg.name,
+              "batch": args.batch, "tokens": args.tokens})
     key = jax.random.PRNGKey(args.seed)
     params = lm_mod.init_params(key, cfg)
     prompts = jax.random.randint(key, (args.batch, args.prompt_len), 0,
                                  cfg.vocab_size)
+    if args.profile:
+        telemetry.start_profile(args.profile)
     t0 = time.time()
     out = generate(cfg, params, prompts, steps=args.tokens,
                    max_len=args.prompt_len + args.tokens + 1, key=key,
                    greedy=False)
     dt = time.time() - t0
+    telemetry.stop_profile()
     n_new = args.batch * args.tokens
     print(f"[serve] arch={cfg.name} generated {out.shape} in {dt:.2f}s "
           f"({1e3 * dt / n_new:.2f} ms/token)")
     print(out[:2])
+    telemetry.record("run_end", tokens=n_new, secs=round(dt, 4),
+                     ms_per_token=round(1e3 * dt / n_new, 4),
+                     compiles=telemetry.compile_count,
+                     compile_secs=round(telemetry.compile_secs, 4))
+    telemetry.close()
     return out
 
 

@@ -48,6 +48,16 @@ from repro.configs import TrainConfig, get_config
 from repro.configs.base import HyperSpace, PopulationConfig
 from repro.data import host_batches
 from repro.pop import LMAgent, PopTrainer
+from repro.telemetry import make_telemetry
+
+
+def _telemetry(args, **meta):
+    """One telemetry object per run: console sink always (the single
+    formatting path), JSONL into ``--log-dir`` when given (what
+    ``tools/report.py`` replays), compile tracking on."""
+    return make_telemetry(args.log_dir, meta=dict(
+        meta, seed=args.seed, population=args.population,
+        strategy=args.strategy, backend=args.backend))
 
 
 def _run_rl(args):
@@ -74,8 +84,9 @@ def _run_rl(args):
         from repro.elastic import plan_layout
         layout = plan_layout(args.devices or len(jax.devices()), n)
         print(f"[train] {layout}")
+    telemetry = _telemetry(args, workload="rl", algo=algo.name, env=args.env)
     trainer = PopTrainer(agent, pcfg, seed=args.seed, layout=layout,
-                         checkpoint_dir=args.ckpt_dir)
+                         checkpoint_dir=args.ckpt_dir, telemetry=telemetry)
     trainer.attach_rollout(env, num_envs=args.num_envs,
                            collect_steps=args.collect_steps,
                            batch_size=args.batch, epochs=args.epochs)
@@ -84,7 +95,8 @@ def _run_rl(args):
         if (args.resize == "auto" and meta is not None
                 and meta["size"] != n):
             from repro.elastic import restore_elastic
-            resumed, lineage = restore_elastic(trainer)
+            with telemetry.compile_scope("resize"):
+                resumed, lineage = restore_elastic(trainer)
             print(f"[train] elastic resume from step {resumed}: population "
                   f"{meta['size']} -> {n}, lineage={np.asarray(lineage)}")
         elif trainer.resume() is not None:
@@ -94,22 +106,19 @@ def _run_rl(args):
     best = {"fitness": float("-inf")}
 
     def on_iter(it, metrics, stats, fitness, lineage):
+        telemetry.tick_profile(it, args.profile, iters=args.profile_iters)
         if fitness is not None:
             best["fitness"] = max(best["fitness"], float(np.max(fitness)))
-        if lineage is not None:
-            print(f"[evolve] iter {it + 1} "
-                  f"fitness={np.asarray(trainer.last_fitness).round(2)} "
-                  f"parents={np.asarray(lineage)}")
         if (it + 1) % args.ckpt_every == 0 or it == args.steps - 1:
             trainer.save()
-        if it % 10 == 0 or it == args.steps - 1:
-            ret = float(np.asarray(stats["mean_return"]).mean())
-            print(f"[train] iter {it} mean_return {ret:+.2f} "
-                  f"({time.time() - t0:.1f}s)", flush=True)
 
     trainer.run_env_loop(args.steps, eval_every=args.eval_every,
                          on_iter=on_iter)
     trainer.wait()
+    telemetry.record("run_end", best_fitness=best["fitness"],
+                     compiles=telemetry.compile_count,
+                     compile_secs=round(telemetry.compile_secs, 3))
+    telemetry.close()
     print(f"[train] done in {time.time() - t0:.1f}s, "
           f"best fitness {best['fitness']:+.2f}")
     return best["fitness"]
@@ -160,6 +169,16 @@ def main(argv=None):
                     "restarts (and launch/serve.py, pointed at the same "
                     "DIR) reuse compiled executables instead of paying "
                     "cold XLA compiles")
+    ap.add_argument("--log-dir", default=None, metavar="DIR",
+                    help="write structured run telemetry (phase timers, "
+                    "per-member fitness/hypers, lineage events, compile "
+                    "tracking) as DIR/telemetry.jsonl — tools/report.py "
+                    "reconstructs the PBT family tree and timings from it")
+    ap.add_argument("--profile", default=None, metavar="DIR",
+                    help="capture a jax.profiler device trace into DIR for "
+                    "a bounded window (starts after the warmup iteration)")
+    ap.add_argument("--profile-iters", type=int, default=3,
+                    help="iterations the --profile trace window spans")
     args = ap.parse_args(argv)
 
     if (args.arch is None) == (args.algo is None):
@@ -188,8 +207,10 @@ def main(argv=None):
         from repro.elastic import plan_layout
         layout = plan_layout(args.devices or len(jax.devices()), n)
         print(f"[train] {layout}")
+    telemetry = _telemetry(args, workload="lm", arch=cfg.name)
     trainer = PopTrainer(LMAgent(cfg, tcfg), pcfg, seed=args.seed,
-                         layout=layout, checkpoint_dir=args.ckpt_dir)
+                         layout=layout, checkpoint_dir=args.ckpt_dir,
+                         telemetry=telemetry)
 
     start_step = 0
     if args.resume == "auto":
@@ -197,7 +218,8 @@ def main(argv=None):
         if (args.resize == "auto" and meta is not None
                 and meta["size"] != n):
             from repro.elastic import restore_elastic
-            resumed, lineage = restore_elastic(trainer)
+            with telemetry.compile_scope("resize"):
+                resumed, lineage = restore_elastic(trainer)
             print(f"[train] elastic resume from step {resumed}: population "
                   f"{meta['size']} -> {n}, lineage={np.asarray(lineage)}")
         else:
@@ -230,20 +252,24 @@ def main(argv=None):
     t0 = time.time()
 
     def on_step(step, metrics, lineage):
-        loss = last["loss"] = float(jnp.mean(metrics["loss"]))
-        if lineage is not None:
-            fitness = trainer.last_fitness
-            print(f"[pbt] step {step + 1} fitness={np.asarray(fitness).round(3)}"
-                  f" parents={np.asarray(lineage)}")
+        telemetry.tick_profile(step - start_step, args.profile,
+                               iters=args.profile_iters)
+        # iteration/evolve rows flow through the telemetry console sink;
+        # only the checkpoint cadence (which wants a materialized loss for
+        # the extras) stays host-side here
         if (step + 1) % args.ckpt_every == 0 or step == args.steps - 1:
-            trainer.save({"loss": loss})
-        if step % 10 == 0 or step == args.steps - 1:
-            print(f"[train] step {step} loss {loss:.4f} "
-                  f"({(time.time() - t0) / max(step - start_step + 1, 1):.2f}"
-                  f" s/step)", flush=True)
+            last["loss"] = float(jnp.mean(metrics["loss"]))
+            trainer.save({"loss": last["loss"]})
 
-    trainer.run(args.steps, lambda step: next_batch(), on_step=on_step)
+    metrics = trainer.run(args.steps, lambda step: next_batch(),
+                          on_step=on_step)
     trainer.wait()
+    if last["loss"] != last["loss"] and metrics is not None:
+        last["loss"] = float(jnp.mean(metrics["loss"]))
+    telemetry.record("run_end", final_loss=last["loss"],
+                     compiles=telemetry.compile_count,
+                     compile_secs=round(telemetry.compile_secs, 3))
+    telemetry.close()
     print(f"[train] done in {time.time() - t0:.1f}s, "
           f"final loss {last['loss']:.4f}")
     return last["loss"]

@@ -30,6 +30,7 @@ Responsibilities:
 """
 from __future__ import annotations
 
+import time
 from collections import deque
 
 import jax
@@ -39,13 +40,21 @@ import numpy as np
 from repro.configs.base import PopulationConfig
 from repro.pop.backend import UpdateBackend, make_update
 from repro.pop.strategy import make_strategy
+from repro.telemetry import RunTelemetry
 
 
 class PopTrainer:
     def __init__(self, agent, pcfg: PopulationConfig | None = None, *,
                  seed: int = 0, key=None, strategy=None, mesh=None,
-                 layout=None, checkpoint_dir=None, keep: int = 2):
+                 layout=None, checkpoint_dir=None, keep: int = 2,
+                 telemetry: RunTelemetry | None = None):
         self.agent = agent
+        # the telemetry object is always present (a disabled RunTelemetry
+        # when none was passed), so the instrumentation below never
+        # branches; all of it is host wall-clock + row dispatch — array
+        # values are only ever touched on the sink's writer thread
+        self.telemetry = telemetry if telemetry is not None \
+            else RunTelemetry(None)
         self.pcfg = pcfg = pcfg if pcfg is not None else PopulationConfig()
         self.n = pcfg.size
         self.key = jax.random.PRNGKey(seed) if key is None else key
@@ -94,20 +103,31 @@ class PopTrainer:
         self._mgr = None
         if checkpoint_dir is not None:
             from repro.checkpoint import CheckpointManager
-            self._mgr = CheckpointManager(checkpoint_dir, keep=keep)
+            run_meta = {"run_id": self.telemetry.run_id} \
+                if self.telemetry.enabled else None
+            self._mgr = CheckpointManager(checkpoint_dir, keep=keep,
+                                          run_meta=run_meta)
+        if self.telemetry.enabled:
+            # the step-0 population-health snapshot anchors the hyper
+            # trajectories tools/report.py reconstructs
+            self.telemetry.record_members(0, hypers=self.hypers)
 
     # ------------------------------------------------------------------ run
     def step(self, batch, fitness=None):
         """One update call (``pcfg.num_steps`` chained member-steps), plus —
         on cadence — one evolve.  Returns ``(metrics, lineage)`` where
         lineage is None unless evolution ran this step."""
-        self.state, metrics = self._update(self.state, batch, self.hypers)
+        with self.telemetry.phase("update"):
+            self.state, metrics = self._update(self.state, batch,
+                                               self.hypers)
         self.step_count += 1
         fit = fitness if fitness is not None \
             else self.agent.fitness_from_metrics(metrics)
         if fit is not None:
             self.report_fitness(fit)
-        return metrics, self._maybe_evolve()
+        lineage = self._maybe_evolve()
+        self.telemetry.record_iteration(self.step_count - 1, metrics=metrics)
+        return metrics, lineage
 
     def run(self, steps: int, batch_fn, *, on_step=None):
         """Drive ``steps`` update calls.  ``batch_fn(step) -> batch``;
@@ -141,6 +161,7 @@ class PopTrainer:
                 "— build the PopulationConfig with donate=False")
         self.key, k = jax.random.split(self.key)
         engine_kwargs.setdefault("mesh", self.mesh)
+        engine_kwargs.setdefault("telemetry", self.telemetry)
         self._rollout = RolloutEngine(self.agent, self.pcfg, env, key=k,
                                       init_state=self.state,
                                       hypers=self.hypers, **engine_kwargs)
@@ -161,7 +182,9 @@ class PopTrainer:
         member's buffer can serve a batch."""
         r = self.rollout
         self.key, k = jax.random.split(self.key)
-        self.state, metrics, stats, did = r.iterate(self.state, self.hypers, k)
+        with self.telemetry.phase("iterate"):
+            self.state, metrics, stats, did = r.iterate(self.state,
+                                                        self.hypers, k)
         self.step_count += 1
         return metrics, stats, did
 
@@ -169,7 +192,8 @@ class PopTrainer:
         """Per-member fitness from deterministic evaluation episodes
         (shape (N,)); does not touch the fitness window."""
         self.key, k = jax.random.split(self.key)
-        return self.rollout.evaluator.evaluate(self.actors, k)
+        with self.telemetry.phase("eval"):
+            return self.rollout.evaluator.evaluate(self.actors, k)
 
     def run_env_loop(self, iters: int, *, eval_every: int = 1, on_iter=None):
         """Drive ``iters`` fused iterations.  Every ``eval_every`` iterations
@@ -184,12 +208,18 @@ class PopTrainer:
         """
         metrics = stats = None
         for it in range(iters):
-            metrics, stats, _ = self.env_iteration()
+            metrics, stats, did = self.env_iteration()
             fitness = None
             if eval_every and (it + 1) % eval_every == 0:
                 fitness = np.asarray(self.evaluate_fitness())
                 self.report_fitness(fitness)
+                self.telemetry.record_members(self.step_count,
+                                              fitness=fitness,
+                                              hypers=self.hypers)
             lineage = self._maybe_evolve()
+            self.telemetry.record_iteration(
+                self.step_count - 1, metrics=metrics, stats=stats,
+                did_update=did)
             if on_iter is not None:
                 on_iter(it, metrics, stats, fitness, lineage)
         return metrics, stats
@@ -220,11 +250,23 @@ class PopTrainer:
     def evolve(self):
         self.last_fitness = self.fitness()
         self.key, k = jax.random.split(self.key)
-        self.state, self.hypers, lineage = self.strategy.evolve(
-            k, self.state, self.hypers, jnp.asarray(self.last_fitness))
+        with self.telemetry.phase("evolve"), \
+                self.telemetry.compile_scope("evolve"):
+            # the strategy's executable compiles on the FIRST evolve (after
+            # warmup flipped to "steady"); label it so steady-state compile
+            # counts stay an honest recompile alarm
+            self.state, self.hypers, lineage = self.strategy.evolve(
+                k, self.state, self.hypers, jnp.asarray(self.last_fitness))
         # pre-evolve fitness describes states that may just have been
         # replaced; start the next window fresh
         self._window.clear()
+        self.telemetry.record_evolve(self.step_count, lineage,
+                                     fitness=self.last_fitness,
+                                     strategy=type(self.strategy).__name__)
+        if self.telemetry.enabled:
+            # post-evolve snapshot: the hypers the children will train with
+            self.telemetry.record_members(self.step_count,
+                                          hypers=self.hypers)
         return lineage
 
     # ------------------------------------------------------------ checkpoint
@@ -268,8 +310,13 @@ class PopTrainer:
         if self._rollout is not None:
             aux["rollout"] = self._rollout.export_state()
         save = self._mgr.save if blocking else self._mgr.save_async
-        save(self.step_count - 1,
-             (self.state, self.strategy.export_state()), meta, aux=aux)
+        t0 = time.perf_counter()
+        with self.telemetry.phase("ckpt"):
+            save(self.step_count - 1,
+                 (self.state, self.strategy.export_state()), meta, aux=aux)
+        self.telemetry.record_ckpt(self.step_count - 1,
+                                   time.perf_counter() - t0,
+                                   blocking=blocking)
 
     def resume(self):
         """Restore the latest checkpoint if one exists (population state,

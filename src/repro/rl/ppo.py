@@ -57,7 +57,9 @@ def init(key, obs_dim: int, act_dim: int, discrete: bool = False,
     params = {"actor": actor,
               "critic": nets.value_init(kc, obs_dim, hidden=hidden)}
     if not discrete:
-        params["log_std"] = jnp.full((act_dim,), LOG_STD_INIT)
+        # Explicit dtype: a weak-typed init leaf would flip to strong after
+        # the first update and retrace the whole fused iteration once.
+        params["log_std"] = jnp.full((act_dim,), LOG_STD_INIT, jnp.float32)
     return PPOState(params=params, opt=_opt_init(params),
                     step=jnp.zeros((), jnp.int32))
 

@@ -64,8 +64,10 @@ class RolloutEngine:
                  num_envs: int = 8, collect_steps: int = 32,
                  batch_size: int = 128, buffer_capacity: int = 100_000,
                  epochs: int = 4, eval_envs: int = 4,
-                 eval_steps: int | None = None, explore_fn=None, mesh=None):
+                 eval_steps: int | None = None, explore_fn=None, mesh=None,
+                 telemetry=None):
         self.agent = agent
+        self.telemetry = telemetry
         self.env = env
         self.n = pcfg.size
         self.num_envs = num_envs
@@ -145,6 +147,17 @@ class RolloutEngine:
 
         self._iteration = jax.jit(
             iteration, donate_argnums=(0, 1, 2) if pcfg.donate else ())
+
+        if telemetry is not None and telemetry.enabled:
+            # the acting-side shape of the run, once, so a log is
+            # self-describing (env_steps_per_iteration contextualizes every
+            # iter row's phase timings)
+            telemetry.record(
+                "engine", algo=type(agent).__name__, experience=self.kind,
+                env=env.spec.name, population=self.n, num_envs=num_envs,
+                collect_steps=collect_steps, batch_size=batch_size,
+                num_steps=self.num_steps,
+                env_steps_per_iteration=self.env_steps_per_iteration)
 
     # ----------------------------------------------------- off-policy fused
     def _build_offpolicy(self):

@@ -76,7 +76,7 @@ class ContinuousEvaluator:
 
     def __init__(self, manager, agent, *, size: int = 4, probe_obs=None,
                  diversity_weight: float = 1.0, length_scale: float = 1.0,
-                 forward: PolicyForward | None = None):
+                 forward: PolicyForward | None = None, telemetry=None):
         self.mgr = manager
         self.agent = agent
         self.size = size
@@ -86,7 +86,12 @@ class ContinuousEvaluator:
         self.forward = forward if forward is not None \
             else PolicyForward.for_agent(agent)
         self.serving: ServingSet | None = None
+        # in-memory audit trail, PLUS — when a telemetry object is given —
+        # every event persisted as a "promotion" row, so a served
+        # ensemble's provenance survives process restart instead of dying
+        # with this list
         self.events: list[dict] = []
+        self.telemetry = telemetry
         self._last_step: int | None = None
 
     def select(self, actors, fitness) -> np.ndarray:
@@ -125,12 +130,18 @@ class ContinuousEvaluator:
         old = set() if self.serving is None else set(
             self.serving.members.tolist())
         now = set(members.tolist())
-        self.events.append({
+        event = {
             "step": step,
             "promoted": sorted(now - old),
             "demoted": sorted(old - now),
             "members": members.tolist(),
-        })
+        }
+        self.events.append(event)
+        if self.telemetry is not None:
+            self.telemetry.record(
+                "promotion", **event,
+                fitness=None if fitness is None else list(fitness),
+                population=extra["size"])
         self.serving = new
         self._last_step = step
         if server is not None:

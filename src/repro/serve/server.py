@@ -28,6 +28,8 @@ between host and device except the explicit request ingress/egress;
 """
 from __future__ import annotations
 
+import time
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -35,6 +37,7 @@ import numpy as np
 from repro import compat
 from repro.serve.ensemble import ServingSet
 from repro.serve.forward import PolicyForward
+from repro.telemetry import LatencyWindow
 
 MODES = ("mean", "vote", "best")
 
@@ -54,7 +57,8 @@ class BatchServer:
 
     def __init__(self, forward: PolicyForward, spec, serving_set=None, *,
                  max_batch: int = 256, mode: str = "mean", mesh=None,
-                 donate: bool = True):
+                 donate: bool = True, telemetry=None,
+                 telemetry_every: int = 100):
         if mode not in MODES:
             raise ValueError(f"unknown reduction mode {mode!r}; one of "
                              f"{MODES}")
@@ -70,6 +74,15 @@ class BatchServer:
         self.set: ServingSet | None = None
         self._pending: list = []
         self.requests_served = 0
+        # serving telemetry: per-request-batch latency histogram + batch
+        # fill ratio + queue depth, summarized into one "serve" row every
+        # ``telemetry_every`` served batches.  All host-side bookkeeping
+        # around the jitted call — the hot path itself is untouched (the
+        # transfer-guard test runs with a live sink attached).
+        self.telemetry = telemetry
+        self.telemetry_every = max(1, telemetry_every)
+        self._window = LatencyWindow()
+        self._recording = True
 
         members_fn = forward.members
         self._request_sharding = None
@@ -131,10 +144,14 @@ class BatchServer:
         stay clean."""
         import warnings
 
-        with warnings.catch_warnings():
-            warnings.filterwarnings(
-                "ignore", message="Some donated buffers were not usable")
-            self.serve(np.zeros((1, self.spec.obs_dim), np.float32))
+        self._recording = False   # a compile is not a latency sample
+        try:
+            with warnings.catch_warnings():
+                warnings.filterwarnings(
+                    "ignore", message="Some donated buffers were not usable")
+                self.serve(np.zeros((1, self.spec.obs_dim), np.float32))
+        finally:
+            self._recording = True
         return self
 
     def place_request(self, obs):
@@ -165,16 +182,41 @@ class BatchServer:
         single = obs.ndim == 1
         if single:
             obs = obs[None]
+        t0 = time.perf_counter()
         outs = []
+        tiles = 0
         for i in range(0, len(obs), self.max_batch):
             chunk = obs[i:i + self.max_batch]
             padded = np.zeros((self.max_batch,) + obs.shape[1:], np.float32)
             padded[:len(chunk)] = chunk
             acts = self.infer_device(self.place_request(padded))
             outs.append(np.asarray(acts)[:len(chunk)])
+            tiles += 1
         self.requests_served += len(obs)
+        if self._recording:
+            # fill = real requests / padded slots dispatched: 1.0 means the
+            # executable's fixed batch is earning its keep, low fill means
+            # latency is being spent on zero padding
+            self._window.add(time.perf_counter() - t0,
+                             fill=len(obs) / (tiles * self.max_batch),
+                             requests=len(obs))
+            if (self.telemetry is not None
+                    and self._window.count >= self.telemetry_every):
+                self.report_telemetry()
         out = np.concatenate(outs, axis=0)
         return out[0] if single else out
+
+    def report_telemetry(self):
+        """Emit the current latency window as one ``serve`` row (p50/p99,
+        fill ratio, queue depth) and start a fresh window.  Called
+        automatically every ``telemetry_every`` batches; call it once more
+        at shutdown for the partial tail."""
+        if self.telemetry is None or not self._window.count:
+            return
+        self.telemetry.record(
+            "serve", mode=self.mode, ensemble=getattr(self.set, "size", 0),
+            max_batch=self.max_batch, **self._window.summary())
+        self._window.reset()
 
     # ------------------------------------------------- request accumulation
     def submit(self, obs) -> int:
@@ -186,6 +228,7 @@ class BatchServer:
             raise ValueError(f"request queue full ({self.max_batch}); "
                              f"flush() first")
         self._pending.append(np.asarray(obs, np.float32))
+        self._window.observe_queue(len(self._pending))
         return len(self._pending) - 1
 
     def flush(self) -> np.ndarray:

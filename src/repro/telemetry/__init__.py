@@ -1,0 +1,33 @@
+"""``repro.telemetry`` — structured run telemetry behind one non-blocking
+sink.
+
+The package turns every training/serving run into evidence: phase timers,
+per-member population health, lineage events, XLA compile tracking and
+serving latency all flow as schema'd rows through a background-thread
+sink (JSONL canonical; CSV/console/fan-out variants), without ever
+touching array values on the train loop's thread — the fused iteration
+and the ensemble serve call stay ONE jitted donated call each.
+
+    from repro.telemetry import RunTelemetry, JSONLSink, ConsoleSink, MultiSink
+    tel = RunTelemetry(MultiSink([JSONLSink(log_dir / "telemetry.jsonl"),
+                                  ConsoleSink(every=10)]),
+                       meta={"algo": "ppo"})
+    trainer = PopTrainer(agent, pcfg, telemetry=tel)
+    ...
+    tel.close()
+
+``tools/report.py`` replays the JSONL into a PBT family tree, per-member
+hyper trajectories, per-phase timing and compile counts; see
+``docs/observability.md``.
+"""
+from repro.telemetry.latency import LatencyWindow
+from repro.telemetry.run import RunTelemetry, make_telemetry
+from repro.telemetry.sink import (CSVSink, ConsoleSink, JSONLSink,
+                                  MetricsSink, MultiSink, NullSink,
+                                  ROW_KINDS, jsonable, validate_row)
+
+__all__ = [
+    "CSVSink", "ConsoleSink", "JSONLSink", "LatencyWindow", "MetricsSink",
+    "MultiSink", "NullSink", "ROW_KINDS", "RunTelemetry", "jsonable",
+    "make_telemetry", "validate_row",
+]

@@ -226,6 +226,44 @@ def test_fused_loop_gates_updates_on_can_sample():
     assert any(changed)
 
 
+def test_fused_offpolicy_iteration_no_transfers_with_live_sink(tmp_path):
+    """The telemetry hard constraint: with a live JSONL sink attached and
+    per-iteration rows being recorded, the warm fused off-policy iteration
+    still runs under transfer_guard('disallow') — phase timers are host
+    wall-clock around dispatch and the sink's worker thread (to which the
+    thread-local guard does not extend) is the only place metric bytes
+    leave the device."""
+    from repro.telemetry import JSONLSink, RunTelemetry
+
+    env = make("pendulum")
+    tel = RunTelemetry(JSONLSink(tmp_path / "telemetry.jsonl", strict=True))
+    pcfg = PopulationConfig(size=2, strategy="none", num_steps=2,
+                            donate=False)
+    tr = PopTrainer(ModuleAgent(td3, env.spec.obs_dim, env.spec.act_dim),
+                    pcfg, seed=0, telemetry=tel)
+    tr.attach_rollout(env, num_envs=2, collect_steps=8, batch_size=8,
+                      buffer_capacity=64, eval_envs=1, eval_steps=5)
+    tr.env_iteration()   # compile outside the guard
+    with jax.transfer_guard("disallow"):
+        metrics, stats, did = tr.env_iteration()
+        # exactly what run_env_loop does each iteration, device values
+        # passed raw — must not sync on this (guarded) thread
+        tel.record_iteration(0, metrics=metrics, stats=stats,
+                             did_update=did)
+    tel.close()
+    import importlib.util
+    from pathlib import Path
+    spec = importlib.util.spec_from_file_location(
+        "report", Path(__file__).resolve().parents[1] / "tools/report.py")
+    report = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(report)
+    rows = report.load_rows(tmp_path / "telemetry.jsonl")
+    assert report.check_rows(rows) == []
+    (it,) = [r for r in rows if r["kind"] == "iter"]
+    assert it["phases"]["iterate"] > 0
+    assert np.isfinite(it["metrics"]["critic_loss"]).all()
+
+
 # ----------------------------------------------------------- new scenarios
 def test_new_envs_step_shapes_and_vmap():
     for name in ("mountain_car", "acrobot"):
