@@ -186,6 +186,9 @@ def _unfused_ppo_iteration(agent, trainer, collect_steps):
     return iteration
 
 
+EPOCH_LEN = 4   # iterations per fused-epoch program (one jitted call)
+
+
 def run(pop_sizes=(1, 2, 4, 8, 16), algos=("td3", "ppo"), num_envs=1,
         collect_steps=256, num_updates=2, batch_size=16, epochs=1,
         iters=10, json_path=None):
@@ -194,13 +197,20 @@ def run(pop_sizes=(1, 2, 4, 8, 16), algos=("td3", "ppo"), num_envs=1,
     cells, single_jit = {}, {}
     for algo in algos:
         for n in pop_sizes:
-            for impl in ("fused", "unfused"):
+            for impl in ("fused", "unfused", "fused_epoch"):
                 agent, trainer = _trainer(algo, n, num_envs, collect_steps,
                                           num_updates, batch_size, epochs,
-                                          donate=impl == "fused")
+                                          donate=impl != "unfused")
                 if impl == "fused":
                     single_jit[(algo, n)] = _probe_single_jit(trainer)
                     cells[(algo, n, impl)] = trainer.env_iteration
+                elif impl == "fused_epoch":
+                    # EPOCH_LEN iterations as ONE jitted donated program
+                    # (RolloutEngine.build_epoch) — what the eager fused
+                    # arm pays per-iteration dispatch for, it pays once
+                    cells[(algo, n, impl)] = (
+                        lambda tr=trainer: tr.run_env_loop(
+                            EPOCH_LEN, eval_every=0, fused=True))
                 elif algo == "ppo":
                     cells[(algo, n, impl)] = _unfused_ppo_iteration(
                         agent, trainer, collect_steps)
@@ -209,12 +219,15 @@ def run(pop_sizes=(1, 2, 4, 8, 16), algos=("td3", "ppo"), num_envs=1,
                         agent, trainer, n, collect_steps, num_updates,
                         batch_size)
     times = _timed_rounds(cells, iters=iters, warmup=2)
+    for key in list(times):
+        if key[2] == "fused_epoch":      # normalize to per-iteration time
+            times[key] /= EPOCH_LEN
 
     rows = []
     for algo in algos:
         for n in pop_sizes:
             env_steps = n * num_envs * collect_steps
-            for impl in ("fused", "unfused"):
+            for impl in ("fused", "unfused", "fused_epoch"):
                 t = times[(algo, n, impl)]
                 row = {"bench": "actor_loop", "algo": algo, "impl": impl,
                        "pop": n,
@@ -223,8 +236,7 @@ def run(pop_sizes=(1, 2, 4, 8, 16), algos=("td3", "ppo"), num_envs=1,
                        "rel_to_pop1": round(
                            t / times[(algo, pop_sizes[0], impl)], 2),
                        "fused_speedup": round(
-                           times[(algo, n, "unfused")]
-                           / times[(algo, n, "fused")], 2),
+                           times[(algo, n, "unfused")] / t, 2),
                        "single_jit": (single_jit[(algo, n)]
                                       if impl == "fused" else None)}
                 rows.append(row)

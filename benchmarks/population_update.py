@@ -13,12 +13,22 @@ the paper's published qualitative result quoted in EXPERIMENTS.md):
                        the "pop" axis of an IslandLayout (one island on a
                        single device; run under the 8-fake-device flag for
                        the multi-accelerator shape)
+  jax_fused_adam_*   — vectorized with the optimizer hoisted to population
+                       level (``repro.optim.population_adam`` — the
+                       ``kernels/pop_adam`` layout, jnp fallback off-TPU)
+  jax_fused_full_*   — fused_adam + fused_linear: member forwards routed
+                       through the population-batched ``pop_*_apply``
+                       family (``kernels/pop_matmul`` layout)
 Reported: ms per *member-update-step* and speedup vs jax_sequential_1.
+``--json PATH`` dumps the rows in the telemetry ``bench`` schema
+(validated in CI by ``tools/report.py --check``).
 """
+import argparse
+
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import emit, td3_batch, timeit
+from benchmarks.common import emit, td3_batch, timeit, write_rows
 from repro.pop import ModuleAgent, make_update
 from repro.rl import td3, sac
 
@@ -26,11 +36,21 @@ OBS, ACT = 17, 6
 
 
 def run(pop_sizes=(1, 2, 4, 8, 16), num_steps_chained=10, agents=("td3", "sac"),
-        iters=3):
+        iters=3, json_path=None):
     key = jax.random.PRNGKey(0)
     emit(["bench", "agent", "impl", "pop", "ms_per_member_step", "speedup_vs_seq1"])
+    rows = []
     for agent_name in agents:
-        agent = ModuleAgent({"td3": td3, "sac": sac}[agent_name], OBS, ACT)
+        module = {"td3": td3, "sac": sac}[agent_name]
+        agent = ModuleAgent(module, OBS, ACT)
+        # fused variants share the module (and, via the same PRNG key, the
+        # same initial population) but route the optimizer / linears
+        # through the population-level kernels
+        fused_variants = {
+            "fused_adam": ModuleAgent(module, OBS, ACT, fused_adam=True),
+            "fused_full": ModuleAgent(module, OBS, ACT, fused_adam=True,
+                                      fused_linear=True),
+        }
         base_ms = None
         for n in pop_sizes:
             pop = agent.population_init(key, n)
@@ -42,18 +62,44 @@ def run(pop_sizes=(1, 2, 4, 8, 16), num_steps_chained=10, agents=("td3", "sac"),
             for backend in ("sequential", "vectorized", "islands"):
                 arms[f"jax_{backend}_1"] = (
                     make_update(agent, backend, num_steps=1, donate=False),
-                    b1, 1)
+                    pop, b1, 1)
                 arms[f"jax_{backend}_{num_steps_chained}"] = (
                     make_update(agent, backend, num_steps=num_steps_chained,
-                                donate=False), bk, num_steps_chained)
-            for name, (fn, batch, steps) in arms.items():
-                t = timeit(lambda: fn(pop, batch, None), iters=iters)
+                                donate=False), pop, bk, num_steps_chained)
+            for vname, vagent in fused_variants.items():
+                vpop = vagent.population_init(key, n)
+                arms[f"jax_{vname}_1"] = (
+                    make_update(vagent, "vectorized", num_steps=1,
+                                donate=False), vpop, b1, 1)
+                arms[f"jax_{vname}_{num_steps_chained}"] = (
+                    make_update(vagent, "vectorized",
+                                num_steps=num_steps_chained,
+                                donate=False), vpop, bk, num_steps_chained)
+            for name, (fn, state0, batch, steps) in arms.items():
+                t = timeit(lambda: fn(state0, batch, None), iters=iters)
                 ms = 1e3 * t / (n * steps)
                 if name == "jax_sequential_1" and n == 1:
                     base_ms = ms
-                emit(["population_update", agent_name, name, n, round(ms, 3),
-                      round(base_ms / ms, 2) if base_ms else ""])
+                speedup = round(base_ms / ms, 2) if base_ms else ""
+                emit(["population_update", agent_name, name, n,
+                      round(ms, 3), speedup])
+                rows.append({"bench": "population_update",
+                             "agent": agent_name, "impl": name, "pop": n,
+                             "ms_per_member_step": round(ms, 3),
+                             "speedup_vs_seq1": speedup or None})
+    if json_path:
+        write_rows(rows, json_path)
+    return rows
 
 
 if __name__ == "__main__":
-    run()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="smaller pops / fewer iters (CI mode)")
+    ap.add_argument("--json", default=None, help="also dump rows as JSONL")
+    args = ap.parse_args()
+    if args.fast:
+        run(pop_sizes=(1, 2, 4), agents=("td3",), iters=2,
+            json_path=args.json)
+    else:
+        run(json_path=args.json)

@@ -155,6 +155,9 @@ class PopulationConfig:
     fused_adam: bool = False             # kernels/pop_adam for population-
                                          # level optimizer steps (TPU; jnp
                                          # fallback elsewhere)
+    fused_linear: bool = False           # kernels/pop_matmul for population-
+                                         # batched linear layers inside the
+                                         # fused update (needs fused_adam)
     pbt_interval: int = 100_000          # trainer steps between evolve calls
     exploit_frac: float = 0.3            # paper §B.1: bottom/top 30%
     perturb_prob: float = 0.5            # resample vs perturb

@@ -68,7 +68,8 @@ def _member_critic_loss(critic, target_policy, target_critic, batch, key, h):
 
 def make_shared_critic_update(*, dvd_coef_fn=None, probe_size: int = 20,
                               train_frac: float = 1.0,
-                              fused_adam: bool = False):
+                              fused_adam: bool = False,
+                              fused_linear: bool = False):
     """Returns jit-able ``update(state, batches, hypers) -> (state, metrics)``.
 
     batches: pytree with leading (N, B, ...) — one batch per member (§4.2:
@@ -85,6 +86,13 @@ def make_shared_critic_update(*, dvd_coef_fn=None, probe_size: int = 20,
     on TPU, a numerically identical jnp fallback elsewhere) instead of
     ``vmap`` over the stock optimizer.  Same ``AdamState`` structure either
     way, so checkpoints don't care.
+
+    ``fused_linear`` additionally evaluates the member POLICY forwards
+    (the target-policy next-action in the critic loss, the actor loss)
+    through the population-batched ``repro.rl.networks.pop_actor_apply``
+    (the ``kernels/pop_matmul`` path on TPU) instead of ``vmap`` of the
+    per-member apply.  The shared critic itself has no population axis and
+    stays on the plain apply.
     """
     if fused_adam:
         from repro.optim.pop_adam import population_adam
@@ -100,13 +108,34 @@ def make_shared_critic_update(*, dvd_coef_fn=None, probe_size: int = 20,
         trained = jnp.arange(n) < k_train   # (N,) static-shape gate
 
         # --- critic step: loss averaged over the trainees (§4.2) -----------
-        def critic_loss(critic):
-            keys = jax.random.split(kc, n)
-            losses = jax.vmap(
-                lambda tp, b, k: _member_critic_loss(
-                    critic, tp, state.target_critic, b, k, h)
-            )(state.target_policies, batches, keys)
-            return jnp.sum(jnp.where(trained, losses, 0.0)) / k_train
+        if fused_linear:
+            def critic_loss(critic):
+                keys = jax.random.split(kc, n)
+                eps = jax.vmap(lambda k: jax.random.normal(
+                    k, batches["action"].shape[1:]))(keys)
+                noise = jnp.clip(h["noise"] * eps, -NOISE_CLIP, NOISE_CLIP)
+                next_a = jnp.clip(
+                    nets.pop_actor_apply(state.target_policies,
+                                         batches["next_obs"]) + noise,
+                    -1.0, 1.0)
+                tq1, tq2 = nets.critic_apply(state.target_critic,
+                                             batches["next_obs"], next_a)
+                target = batches["reward"] + h["discount"] * \
+                    (1 - batches["done"]) * jnp.minimum(tq1, tq2)
+                q1, q2 = nets.critic_apply(critic, batches["obs"],
+                                           batches["action"])
+                target = jax.lax.stop_gradient(target)
+                losses = jnp.mean((q1 - target) ** 2, axis=1) + \
+                    jnp.mean((q2 - target) ** 2, axis=1)
+                return jnp.sum(jnp.where(trained, losses, 0.0)) / k_train
+        else:
+            def critic_loss(critic):
+                keys = jax.random.split(kc, n)
+                losses = jax.vmap(
+                    lambda tp, b, k: _member_critic_loss(
+                        critic, tp, state.target_critic, b, k, h)
+                )(state.target_policies, batches, keys)
+                return jnp.sum(jnp.where(trained, losses, 0.0)) / k_train
 
         closs, cgrads = jax.value_and_grad(critic_loss)(state.critic)
         cupd, critic_opt = _opt_update(cgrads, state.critic_opt,
@@ -115,11 +144,16 @@ def make_shared_critic_update(*, dvd_coef_fn=None, probe_size: int = 20,
 
         # --- policy step: per-member actor loss, vmapped -------------------
         def pop_actor_loss(policies):
-            def one(policy, b):
-                a = nets.actor_apply(policy, b["obs"])
-                q1, _ = nets.critic_apply(critic, b["obs"], a)
-                return -jnp.mean(q1)
-            loss = jnp.mean(jax.vmap(one)(policies, batches))
+            if fused_linear:
+                a = nets.pop_actor_apply(policies, batches["obs"])
+                q1, _ = nets.critic_apply(critic, batches["obs"], a)
+                loss = jnp.mean(-jnp.mean(q1, axis=1))
+            else:
+                def one(policy, b):
+                    a = nets.actor_apply(policy, b["obs"])
+                    q1, _ = nets.critic_apply(critic, b["obs"], a)
+                    return -jnp.mean(q1)
+                loss = jnp.mean(jax.vmap(one)(policies, batches))
             if dvd_coef_fn is not None:
                 probe = jax.tree.map(lambda x: x[0, :probe_size],
                                      batches)["obs"]

@@ -33,17 +33,30 @@ def _build_islands(agent, num_steps: int, donate: bool, mesh=None):
                          "shared critic is replicated, not split over "
                          "islands)")
     from repro.core.vectorize import chain_steps
-    inner = (agent.update if num_steps == 1
-             else chain_steps(agent.update, num_steps))
     batch_axis = 0 if num_steps == 1 else 1
 
-    def local(pop_state, batches, hypers):
-        # ONE island's body: vectorized update over its own member group
-        if hypers is None:
-            return jax.vmap(lambda s, b: inner(s, b, None),
-                            in_axes=(0, batch_axis))(pop_state, batches)
-        return jax.vmap(inner, in_axes=(0, batch_axis, 0))(
-            pop_state, batches, hypers)
+    fused_fn = (agent.fused_update()
+                if getattr(agent, "fused_adam", False) else None)
+    if fused_fn is not None:
+        # population-level update over the island's OWN member group: under
+        # shard_map the local shard is just a smaller population, so the
+        # fused pop_adam path shards over "pop" unchanged
+        pop_inner = (fused_fn if num_steps == 1
+                     else chain_steps(fused_fn, num_steps))
+
+        def local(pop_state, batches, hypers):
+            return pop_inner(pop_state, batches, hypers)
+    else:
+        inner = (agent.update if num_steps == 1
+                 else chain_steps(agent.update, num_steps))
+
+        def local(pop_state, batches, hypers):
+            # ONE island's body: vectorized update over its own member group
+            if hypers is None:
+                return jax.vmap(lambda s, b: inner(s, b, None),
+                                in_axes=(0, batch_axis))(pop_state, batches)
+            return jax.vmap(inner, in_axes=(0, batch_axis, 0))(
+                pop_state, batches, hypers)
 
     state_spec = P("pop")
     batch_spec = P("pop") if num_steps == 1 else P(None, "pop")

@@ -41,6 +41,20 @@ def _kernel(x_ref, w_ref, b_ref, o_ref, acc, *, activation: str):
         o_ref[0] = y.astype(o_ref.dtype)
 
 
+def supports_shapes(bsz: int, k: int, m: int, *, bm: int = 128,
+                    bn: int = 128, bk: int = 128) -> bool:
+    """Whether :func:`pop_matmul` can tile ``(N,bsz,k) @ (N,k,m)``.
+
+    Blocks clamp to the problem, so each dimension must either fit inside
+    one block or be a multiple of the block.  ``repro.rl.networks`` consults
+    this before routing a population-batched linear through the kernel, so
+    odd hidden sizes fall back to the jnp path instead of asserting."""
+    if min(bsz, k, m) <= 0:
+        return False
+    return all(d % min(blk, d) == 0
+               for d, blk in ((bsz, bm), (m, bn), (k, bk)))
+
+
 def pop_matmul(x, w, b=None, *, activation: str = "none",
                bm: int = 128, bn: int = 128, bk: int = 128,
                interpret: bool = False):

@@ -74,11 +74,16 @@ def _serve_rl(args):
     from repro.checkpoint import CheckpointManager
     from repro.envs import make
     from repro.rl import make_agent
-    from repro.serve import (BatchServer, ContinuousEvaluator,
+    from repro.serve import (BatchServer, ContinuousEvaluator, PolicyForward,
                              probe_observations)
 
     env = make(args.env)
     agent = make_agent(args.algo, env.spec)
+    # --fused-linear: the ensemble call evaluates all members through the
+    # population-batched forward (kernels/pop_matmul layout) instead of
+    # vmap of the per-member apply — same actions, one kernel on TPU
+    forward = PolicyForward.fused_for_agent(agent) if args.fused_linear \
+        else None
     telemetry = make_telemetry(
         args.log_dir, console=False,
         meta={"workload": "serve-rl", "algo": args.algo, "env": args.env,
@@ -96,7 +101,8 @@ def _serve_rl(args):
     watcher = ContinuousEvaluator(
         mgr, agent, size=args.ensemble,
         probe_obs=probe_observations(env, kp, args.probe),
-        diversity_weight=args.diversity_weight, telemetry=telemetry)
+        diversity_weight=args.diversity_weight, forward=forward,
+        telemetry=telemetry)
     sset = watcher.poll()
 
     mesh = None
@@ -178,6 +184,10 @@ def main(argv=None):
     ap.add_argument("--probe", type=int, default=32,
                     help="probe observations for behavioral embeddings")
     ap.add_argument("--diversity-weight", type=float, default=1.0)
+    ap.add_argument("--fused-linear", action="store_true",
+                    help="serve the ensemble through the population-"
+                    "batched forward (kernels/pop_matmul on TPU) instead "
+                    "of vmap over members")
     ap.add_argument("--islands", action="store_true",
                     help="shard the ensemble's member axis over all "
                     "devices (populations too big for one accelerator)")

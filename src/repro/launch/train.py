@@ -78,7 +78,9 @@ def _run_rl(args):
     pcfg = PopulationConfig(
         size=n, strategy=args.strategy, backend=args.backend,
         num_steps=args.updates_per_iter, pbt_interval=args.pbt_interval,
-        hyper_space=algo.hyper_space, donate=False)  # async ckpts read state
+        hyper_space=algo.hyper_space, donate=False,  # async ckpts read state
+        fused_adam=args.fused_adam or args.fused_linear,
+        fused_linear=args.fused_linear)
     layout = None
     if args.backend == "islands":
         from repro.elastic import plan_layout
@@ -113,7 +115,7 @@ def _run_rl(args):
             trainer.save()
 
     trainer.run_env_loop(args.steps, eval_every=args.eval_every,
-                         on_iter=on_iter)
+                         on_iter=on_iter, fused=args.fused_epoch)
     trainer.wait()
     telemetry.record("run_end", best_fitness=best["fitness"],
                      compiles=telemetry.compile_count,
@@ -150,6 +152,20 @@ def main(argv=None):
                     choices=["vectorized", "sequential", "sharded",
                              "islands"])
     ap.add_argument("--pbt-interval", type=int, default=50)
+    ap.add_argument("--fused-adam", action="store_true",
+                    help="hoist every member's Adam step into the "
+                    "population-level repro.optim.population_adam "
+                    "(kernels/pop_adam on TPU); numerics unchanged")
+    ap.add_argument("--fused-linear", action="store_true",
+                    help="route population-batched linear layers inside "
+                    "the fused update through kernels/pop_matmul "
+                    "(implies --fused-adam)")
+    ap.add_argument("--fused-epoch", action="store_true",
+                    help="run whole train–evolve epochs (pbt_interval "
+                    "iterations + evals + evolve) as ONE jitted call; "
+                    "needs --steps a multiple of --pbt-interval and "
+                    "--eval-every dividing it (bit-exact vs the eager "
+                    "loop — tests/test_fused_epoch.py)")
     ap.add_argument("--smoke", action="store_true",
                     help="use the reduced same-family config (CPU-sized)")
     ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")

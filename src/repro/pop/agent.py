@@ -110,12 +110,17 @@ class ModuleAgent(AgentBase):
     """
 
     def __init__(self, module, obs_dim: int, act_dim: int, *,
-                 actor_field: str | None = None, **init_kwargs):
+                 actor_field: str | None = None, fused_adam: bool = False,
+                 fused_linear: bool = False, **init_kwargs):
         self.module = module
         self.exploration_module = module
         self.obs_dim, self.act_dim = obs_dim, act_dim
         self.init_kwargs = init_kwargs
         self._actor_field = actor_field
+        # opt-in population-level optimizer / linear-layer fusion; the
+        # PopTrainer flips these when the PopulationConfig says so
+        self.fused_adam = fused_adam
+        self.fused_linear = fused_linear
 
     @property
     def default_hypers(self) -> dict:
@@ -127,6 +132,16 @@ class ModuleAgent(AgentBase):
 
     def update(self, state, batch, hypers=None):
         return self.module.update(state, batch, hypers)
+
+    def fused_update(self):
+        """The module's POPULATION-level update (optimizer hoisted into
+        ``repro.optim.population_adam``, the ``kernels/pop_adam`` path), or
+        None when the module doesn't provide one.  Backends route through
+        this instead of ``vmap(update)`` when ``fused_adam`` is set."""
+        maker = getattr(self.module, "make_population_update", None)
+        if maker is None:
+            return None
+        return maker(fused_linear=self.fused_linear)
 
     def policy(self, actor_params, obs, key=None):
         return self.module.policy(actor_params, obs, key)
@@ -231,7 +246,7 @@ class SharedCriticAgent(AgentBase):
 
     def __init__(self, obs_dim: int, act_dim: int, *, dvd_coef_fn=None,
                  probe_size: int = 20, train_frac: float = 1.0,
-                 fused_adam: bool = False):
+                 fused_adam: bool = False, fused_linear: bool = False):
         from repro.core import shared
         from repro.rl import td3
         self._shared = shared
@@ -241,9 +256,11 @@ class SharedCriticAgent(AgentBase):
         self.dvd_coef_fn = dvd_coef_fn
         self.probe_size = probe_size
         self.train_frac = train_frac
-        # opt-in kernels/pop_adam policy step; PopTrainer flips this on
-        # when the PopulationConfig says fused_adam=True
+        # opt-in kernels/pop_adam policy step + kernels/pop_matmul member
+        # forwards; PopTrainer flips these on when the PopulationConfig
+        # says fused_adam / fused_linear = True
         self.fused_adam = fused_adam
+        self.fused_linear = fused_linear
 
     def population_init(self, key, n: int):
         return self._shared.init(key, self.obs_dim, self.act_dim, n)
@@ -255,7 +272,8 @@ class SharedCriticAgent(AgentBase):
             return self._shared.sequential_shared_critic_update()
         return self._shared.make_shared_critic_update(
             dvd_coef_fn=self.dvd_coef_fn, probe_size=self.probe_size,
-            train_frac=self.train_frac, fused_adam=self.fused_adam)
+            train_frac=self.train_frac, fused_adam=self.fused_adam,
+            fused_linear=self.fused_linear)
 
     def update(self, state, batch, hypers=None):
         raise TypeError("SharedCriticAgent is population_level; backends "

@@ -42,9 +42,17 @@ class UpdateBackend(str, Enum):
 
 
 def _build_vectorized(agent, num_steps: int, donate: bool):
-    from repro.core.vectorize import vectorized_update
+    from repro.core.vectorize import chain_steps, vectorized_update
     if agent.population_level:
         return jax.jit(agent.population_update())
+    if getattr(agent, "fused_adam", False):
+        fn = agent.fused_update()
+        if fn is not None:
+            # population-level update (optimizer hoisted into
+            # repro.optim.population_adam); batches keep the same
+            # (num_steps, N, B, ...) layout, chained at population level
+            inner = fn if num_steps == 1 else chain_steps(fn, num_steps)
+            return jax.jit(inner, donate_argnums=(0,) if donate else ())
     return vectorized_update(agent.update, num_steps=num_steps, donate=donate)
 
 

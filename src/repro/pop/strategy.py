@@ -30,7 +30,20 @@ from repro.core.pbt import pbt_step
 
 
 class EvolutionStrategy:
-    """Base class / protocol. Subclasses override ``evolve``."""
+    """Base class / protocol. Subclasses override ``evolve_fn``.
+
+    ``evolve_fn()`` returns the PURE evolve step
+
+        fn(key, pop_state, hypers, fitness, strat_state)
+            -> (pop_state, hypers, lineage, strat_state)
+
+    with every input/output a jax value (or None), so the rollout engine can
+    fuse it into the jitted train–evolve epoch; ``strat_state`` threads the
+    strategy's internal distribution state (CEM's gaussian) through jit
+    instead of mutating the instance.  ``evolve`` is the eager driver-level
+    wrapper: it feeds ``export_state()`` in, applies ``import_state`` to
+    what comes out, and keeps the historical 3-tuple signature.
+    """
 
     null = False  # True: trainer skips the evolve step entirely
 
@@ -55,8 +68,30 @@ class EvolutionStrategy:
     def import_state(self, state):
         """Restore what ``export_state`` produced (no-op by default)."""
 
-    def evolve(self, key, pop_state, hypers, fitness):
+    def evolve_fn(self):
         raise NotImplementedError
+
+    def evolve_jit(self):
+        """``jax.jit(evolve_fn())``, cached — the ONE compiled evolve step
+        both the eager ``evolve`` wrapper and the fused train–evolve epoch
+        call, so the two paths share one executable (and therefore one set
+        of float-rounding decisions: the epoch parity tests compare them
+        bitwise)."""
+        fn = getattr(self, "_evolve_jit", None)
+        if fn is None:
+            fn = self._evolve_jit = jax.jit(self.evolve_fn())
+        return fn
+
+    def evolve(self, key, pop_state, hypers, fitness):
+        pop_state, hypers, lineage, strat_state = self.evolve_jit()(
+            key, pop_state, hypers, fitness, self.export_state())
+        if strat_state is not None:
+            self.import_state(strat_state)
+        return pop_state, hypers, lineage
+
+
+def _identity_evolve(key, pop_state, hypers, fitness, strat_state):
+    return pop_state, hypers, jnp.arange(fitness.shape[0]), strat_state
 
 
 class NoEvolution(EvolutionStrategy):
@@ -67,8 +102,8 @@ class NoEvolution(EvolutionStrategy):
     def __init__(self, pcfg: PopulationConfig | None = None):
         self.pcfg = pcfg
 
-    def evolve(self, key, pop_state, hypers, fitness):
-        return pop_state, hypers, jnp.arange(fitness.shape[0])
+    def evolve_fn(self):
+        return _identity_evolve
 
 
 class PBT(EvolutionStrategy):
@@ -88,11 +123,17 @@ class PBT(EvolutionStrategy):
         self._gather = agent.gather_members
         return pop_state
 
-    def evolve(self, key, pop_state, hypers, fitness):
-        state, new_hypers, parents = pbt_step(
-            key, pop_state, {} if hypers is None else hypers, fitness,
-            self.pcfg, gather=self._gather)
-        return state, (None if hypers is None else new_hypers), parents
+    def evolve_fn(self):
+        pcfg, gather = self.pcfg, self._gather
+
+        def fn(key, pop_state, hypers, fitness, strat_state):
+            state, new_hypers, parents = pbt_step(
+                key, pop_state, {} if hypers is None else hypers, fitness,
+                pcfg, gather=gather)
+            return (state, (None if hypers is None else new_hypers),
+                    parents, strat_state)
+
+        return fn
 
 
 class CEM(EvolutionStrategy):
@@ -131,15 +172,21 @@ class CEM(EvolutionStrategy):
         from repro.core.cem import CEMState
         self.cem_state = CEMState(*state)
 
-    def evolve(self, key, pop_state, hypers, fitness):
-        n = fitness.shape[0]
-        flat = jax.vmap(lambda p: ravel_pytree(p)[0])(
-            self._agent.evolvable_params(pop_state))
-        self.cem_state = cem_update(self.cem_state, flat, fitness,
-                                    elite_frac=self.pcfg.elite_frac,
-                                    noise_decay=self.pcfg.cem_noise_decay)
-        pop_state = self._inject(key, pop_state, n)
-        return pop_state, hypers, jnp.full((n,), -1, jnp.int32)
+    def evolve_fn(self):
+        agent, unravel, pcfg = self._agent, self._unravel, self.pcfg
+
+        def fn(key, pop_state, hypers, fitness, strat_state):
+            n = fitness.shape[0]
+            flat = jax.vmap(lambda p: ravel_pytree(p)[0])(
+                agent.evolvable_params(pop_state))
+            cs = cem_update(strat_state, flat, fitness,
+                            elite_frac=pcfg.elite_frac,
+                            noise_decay=pcfg.cem_noise_decay)
+            new_params = jax.vmap(unravel)(cem_sample(key, cs, n))
+            pop_state = agent.with_evolvable_params(pop_state, new_params)
+            return pop_state, hypers, jnp.full((n,), -1, jnp.int32), cs
+
+        return fn
 
 
 class DvD(EvolutionStrategy):
@@ -157,8 +204,8 @@ class DvD(EvolutionStrategy):
             agent.dvd_coef_fn = lambda step: dvd_coef_schedule(
                 step, period=period)
 
-    def evolve(self, key, pop_state, hypers, fitness):
-        return pop_state, hypers, jnp.arange(fitness.shape[0])
+    def evolve_fn(self):
+        return _identity_evolve
 
 
 STRATEGIES: dict[str, type] = {

@@ -64,10 +64,14 @@ class PopTrainer:
         self.key, k_init, k_bind, k_hyp = jax.random.split(self.key, 4)
         self.state = agent.population_init(k_init, self.n)
         if pcfg.fused_adam and hasattr(agent, "fused_adam"):
-            # opt-in kernels/pop_adam path for agents with a population-
-            # level optimizer step (the shared-critic family); per-member
-            # agents ignore the flag (their optimizer runs under vmap)
+            # opt-in kernels/pop_adam path: shared-critic agents hoist their
+            # policy Adam step, module agents switch to the population-level
+            # make_population_update of their rl module
             agent.fused_adam = True
+        if pcfg.fused_linear and hasattr(agent, "fused_linear"):
+            # opt-in kernels/pop_matmul path for the population-batched
+            # linear layers inside the fused update
+            agent.fused_linear = True
         self.strategy.configure_agent(agent)
         self.state = self.strategy.bind(k_bind, agent, self.state)
         self.hypers = self.strategy.init_hypers(k_hyp, self.n)
@@ -195,7 +199,8 @@ class PopTrainer:
         with self.telemetry.phase("eval"):
             return self.rollout.evaluator.evaluate(self.actors, k)
 
-    def run_env_loop(self, iters: int, *, eval_every: int = 1, on_iter=None):
+    def run_env_loop(self, iters: int, *, eval_every: int = 1, on_iter=None,
+                     fused: bool = False):
         """Drive ``iters`` fused iterations.  Every ``eval_every`` iterations
         the evaluator scores the population into the fitness window, and —
         exactly like ``step`` — the strategy evolves every
@@ -205,13 +210,26 @@ class PopTrainer:
         lineage)`` is the logging hook.  Returns the last (metrics, stats).
         (On-policy engines update from the first iteration — did_update is
         always True; replay engines warm up until buffers can sample.)
+
+        ``fused=True`` runs the SAME loop as whole jitted train–evolve
+        epochs (``RolloutEngine.build_epoch``): ``pcfg.pbt_interval``
+        iterations + evaluations + the strategy's evolve execute as one
+        donated device program per epoch, bit-exact against the eager path
+        (``tests/test_fused_epoch.py``), with per-iteration telemetry
+        reconstructed from the stacked outputs.  Alignment requirements
+        (checked): ``iters`` a multiple of the epoch length, ``eval_every``
+        dividing it, the per-epoch evaluation count within
+        ``fitness_window``, an epoch-aligned ``step_count`` and an empty
+        fitness window when evolution is active.
         """
+        if fused:
+            return self._run_env_loop_fused(iters, eval_every, on_iter)
         metrics = stats = None
         for it in range(iters):
             metrics, stats, did = self.env_iteration()
             fitness = None
             if eval_every and (it + 1) % eval_every == 0:
-                fitness = np.asarray(self.evaluate_fitness())
+                fitness = self.evaluate_fitness()
                 self.report_fitness(fitness)
                 self.telemetry.record_members(self.step_count,
                                               fitness=fitness,
@@ -224,18 +242,154 @@ class PopTrainer:
                 on_iter(it, metrics, stats, fitness, lineage)
         return metrics, stats
 
+    def _fused_epoch(self, epoch_len: int, eval_every: int, evolving: bool):
+        """The compiled epoch for this shape, built once and cached (a new
+        trace per distinct (epoch_len, eval_every, evolving) triple only —
+        steady-state epochs re-enter the same executable)."""
+        key = (epoch_len, eval_every, evolving)
+        cache = getattr(self, "_epoch_cache", None)
+        if cache is None:
+            cache = self._epoch_cache = {}
+        fn = cache.get(key)
+        if fn is None:
+            fn = cache[key] = self.rollout.build_epoch(
+                epoch_len=epoch_len, eval_every=eval_every,
+                evolve_fn=self.strategy.evolve_jit() if evolving else None,
+                donate=self.pcfg.donate)
+        return fn
+
+    def _run_env_loop_fused(self, iters: int, eval_every: int, on_iter):
+        r = self.rollout
+        pbt = self.pcfg.pbt_interval
+        evolving = bool(not self.strategy.null and pbt and iters >= pbt)
+        if evolving:
+            epoch_len = pbt
+            if iters % epoch_len:
+                raise ValueError(
+                    f"fused train–evolve epochs need iters ({iters}) to be "
+                    f"a multiple of pbt_interval ({epoch_len})")
+            if not eval_every or epoch_len % eval_every:
+                raise ValueError(
+                    f"fused train–evolve epochs need eval_every "
+                    f"({eval_every}) to divide pbt_interval ({epoch_len}) "
+                    f"so every epoch scores the population before evolving")
+            if epoch_len // eval_every > self.pcfg.fitness_window:
+                raise ValueError(
+                    f"{epoch_len // eval_every} evaluations per epoch "
+                    f"overflow fitness_window={self.pcfg.fitness_window}: "
+                    f"the eager loop would drop early rows and diverge")
+            if self.step_count % epoch_len:
+                raise ValueError(
+                    f"step_count={self.step_count} is not epoch-aligned "
+                    f"(pbt_interval={epoch_len}); the eager cadence would "
+                    f"evolve mid-epoch")
+            if self._window:
+                raise ValueError(
+                    "fitness window is non-empty at fused-epoch entry; the "
+                    "eager loop would mix pre-epoch rows into the evolve "
+                    "fitness")
+        else:
+            epoch_len = iters
+            if (not self.strategy.null and pbt and eval_every
+                    and (self.step_count + iters) // pbt
+                    > self.step_count // pbt):
+                raise ValueError(
+                    f"iters={iters} from step {self.step_count} crosses an "
+                    f"evolve boundary (pbt_interval={pbt}) mid-epoch; run "
+                    f"a multiple of pbt_interval instead")
+        n_evals = (epoch_len // eval_every) if eval_every else 0
+
+        epoch_fn = self._fused_epoch(epoch_len, eval_every, evolving)
+        metrics = stats = None
+        start = self.step_count
+        for _ in range(max(1, iters // epoch_len) if epoch_len else 0):
+            base = self.step_count
+            hypers_before = self.hypers
+            with self.telemetry.phase("epoch"):
+                (self.state, r.bufs, r.vstate, new_hypers, strat_state,
+                 self.key, m_stack, s_stack, dids, evals, fitness,
+                 lineage) = epoch_fn(self.state, r.bufs, r.vstate,
+                                     self.hypers,
+                                     self.strategy.export_state(), self.key)
+            self.step_count += epoch_len
+            # per-iteration bookkeeping slices the stacked outputs with
+            # python index constants — host-to-device uploads of an int32
+            # each, never a device sync.  Scope-allow them so the whole
+            # loop still runs under transfer_guard("disallow") (the
+            # device-to-host direction stays guarded: nothing here fetches)
+            with jax.transfer_guard_host_to_device("allow"):
+                self._fused_epoch_bookkeeping(
+                    base, start, epoch_len, eval_every, n_evals, evolving,
+                    hypers_before, new_hypers, strat_state, m_stack,
+                    s_stack, dids, evals, fitness, lineage, on_iter)
+                metrics = jax.tree.map(lambda x: x[-1], m_stack)
+                stats = jax.tree.map(lambda x: x[-1], s_stack)
+        return metrics, stats
+
+    def _fused_epoch_bookkeeping(self, base, start, epoch_len, eval_every,
+                                 n_evals, evolving, hypers_before,
+                                 new_hypers, strat_state, m_stack, s_stack,
+                                 dids, evals, fitness, lineage, on_iter):
+        """Re-emit the eager loop's per-iteration side effects (telemetry
+        rows, fitness-window appends, the evolve bookkeeping, ``on_iter``)
+        from one fused epoch's stacked device outputs."""
+        # per-iteration metric slices exist only for the telemetry rows /
+        # the on_iter hook; with neither attached, skip the dispatch of
+        # epoch_len x len(metrics) slice ops entirely
+        emit = self.telemetry.enabled or on_iter is not None
+        for i in range(epoch_len):
+            metrics = stats = None
+            if emit:
+                metrics = jax.tree.map(lambda x: x[i], m_stack)
+                stats = jax.tree.map(lambda x: x[i], s_stack)
+            fit_i = None
+            if n_evals and (i + 1) % eval_every == 0:
+                fit_i = evals[(i + 1) // eval_every - 1]
+                if not evolving:
+                    self.report_fitness(fit_i)
+                self.telemetry.record_members(base + i + 1, fitness=fit_i,
+                                              hypers=hypers_before)
+            lin_i = None
+            if evolving and i == epoch_len - 1:
+                # the evolve ran on device at the end of the epoch; surface
+                # it through the same telemetry rows as the eager path
+                if strat_state is not None:
+                    self.strategy.import_state(strat_state)
+                self.hypers = new_hypers
+                self.last_fitness = fitness
+                self._window.clear()
+                lin_i = lineage
+                self.telemetry.record_evolve(
+                    base + epoch_len, lineage, fitness=fitness,
+                    strategy=type(self.strategy).__name__)
+                if self.telemetry.enabled:
+                    self.telemetry.record_members(base + epoch_len,
+                                                  hypers=self.hypers)
+            if emit:
+                self.telemetry.record_iteration(base + i, metrics=metrics,
+                                                stats=stats,
+                                                did_update=dids[i])
+            if on_iter is not None:
+                on_iter(base + i - start, metrics, stats, fit_i, lin_i)
+
     # ---------------------------------------------------------------- evolve
     def report_fitness(self, fitness):
         """Feed externally-measured per-member fitness (episode returns)
         into the window — for loops where evaluation happens outside
-        ``step`` (e.g. CEM's evaluate-after-training ordering)."""
-        self._window.append(np.asarray(fitness))
+        ``step`` (e.g. CEM's evaluate-after-training ordering).
+
+        Rows stay ON DEVICE: the window only ever feeds the (jitted) evolve
+        and the telemetry/checkpoint sinks, so forcing a host sync here —
+        the old ``np.asarray`` — stalled every evaluation iteration for a
+        value nothing on the host path reads (``tests/test_fused_epoch.py``
+        pins the warm loop host-transfer-free)."""
+        self._window.append(jnp.asarray(fitness))
 
     def fitness(self):
-        """Windowed-mean per-member fitness, shape (N,)."""
+        """Windowed-mean per-member fitness, shape (N,) — a device value."""
         if not self._window:
             return None
-        return np.mean(np.stack(self._window), axis=0)
+        return jnp.mean(jnp.stack(list(self._window)), axis=0)
 
     def _maybe_evolve(self):
         """Evolve iff on cadence (every ``pcfg.pbt_interval`` trainer steps,

@@ -70,3 +70,55 @@ def update(state: DQNState, batch, hypers=None) -> tuple[DQNState, dict]:
     target_q = jax.tree.map(lambda t, o: jnp.where(sync, o, t), state.target_q, q)
     return DQNState(q=q, target_q=target_q, opt=opt, step=step, key=key), \
         {"loss": loss}
+
+
+def _member_loss(q, target_q, batch, h):
+    """Stock TD loss with explicit args (vmappable per member)."""
+    qvals = nets.q_net_apply(q, batch["obs"])
+    qa = jnp.take_along_axis(qvals, batch["action"][..., None].astype(jnp.int32),
+                             axis=-1)[..., 0]
+    tq = nets.q_net_apply(target_q, batch["next_obs"])
+    target = batch["reward"] + h["discount"] * (1 - batch["done"]) * \
+        jnp.max(tq, axis=-1)
+    return jnp.mean((qa - jax.lax.stop_gradient(target)) ** 2)
+
+
+def make_population_update(*, fused_linear: bool = False, fused=None):
+    """Population-level DQN update: per-member TD gradients with the Adam
+    application hoisted into ``repro.optim.population_adam`` and the target
+    sync expressed as a member-masked select (see ``repro.rl.fused``)."""
+    from repro.optim.pop_adam import population_adam
+    from repro.rl.fused import pop_hypers, pop_select, pop_split
+    _, pa = population_adam(1e-4, fused=fused)
+
+    def pop_loss(q, target_q, batch, h):
+        qvals = nets.pop_q_net_apply(q, batch["obs"])
+        qa = jnp.take_along_axis(
+            qvals, batch["action"][..., None].astype(jnp.int32),
+            axis=-1)[..., 0]
+        tq = nets.pop_q_net_apply(target_q, batch["next_obs"])
+        target = batch["reward"] + h["discount"][:, None] * \
+            (1 - batch["done"]) * jnp.max(tq, axis=-1)
+        per = jnp.mean((qa - jax.lax.stop_gradient(target)) ** 2, axis=1)
+        return jnp.sum(per), per
+
+    def update(state: DQNState, batch, hypers=None):
+        n = state.step.shape[0]
+        h = pop_hypers(DEFAULT_HYPERS, hypers, n)
+        key, _ = pop_split(state.key)
+
+        if fused_linear:
+            (_, loss), grads = jax.value_and_grad(pop_loss, has_aux=True)(
+                state.q, state.target_q, batch, h)
+        else:
+            loss, grads = jax.vmap(jax.value_and_grad(_member_loss))(
+                state.q, state.target_q, batch, h)
+        q, opt = pa(state.q, grads, state.opt, lr_override=h["lr"])
+
+        step = state.step + 1
+        sync = (step % TARGET_UPDATE_EVERY) == 0
+        target_q = pop_select(sync, q, state.target_q)
+        return DQNState(q=q, target_q=target_q, opt=opt, step=step,
+                        key=key), {"loss": loss}
+
+    return update

@@ -1,0 +1,52 @@
+"""Shared machinery for the population-level (fused-optimizer) updates.
+
+Every rl module exposes ``make_population_update(...)`` building an update
+with the POPULATION-level signature
+
+    update(pop_state, batch, hypers) -> (pop_state, metrics)
+
+where ``pop_state`` is the member-stacked state (leaves ``(N, ...)``),
+``batch`` leaves are ``(N, B, ...)`` and hypers is a dict of ``(N,)``
+vectors (or None).  The decomposition is the same as the stock per-member
+``update`` under ``vmap`` — per-member gradients, per-member gates — except
+the optimizer is HOISTED out of the member step into one
+``repro.optim.population_adam`` application over the whole population's
+flattened ``(N, P)`` parameter matrix (the ``kernels/pop_adam`` Pallas
+kernel on TPU, its elementwise-identical jnp fallback elsewhere).
+
+This module holds the pieces all four algorithms share: broadcasting
+default hypers to per-member ``(N,)`` vectors, the member-masked tree
+select used for gated components (TD3's delayed actor, DQN's target sync),
+and the per-member key split.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def pop_hypers(defaults: dict, hypers, n: int) -> dict:
+    """Merge ``defaults`` with the per-member ``hypers`` dict, broadcasting
+    every entry to an ``(N,)`` float32 vector so one population-level
+    expression serves members with different values."""
+    h = {k: jnp.broadcast_to(jnp.asarray(v, jnp.float32), (n,))
+         for k, v in defaults.items()}
+    if hypers:
+        for k, v in hypers.items():
+            h[k] = jnp.broadcast_to(jnp.asarray(v, jnp.float32), (n,))
+    return h
+
+
+def pop_select(mask, new, old):
+    """Per-member tree select: leaves of ``new``/``old`` are ``(N, ...)``,
+    ``mask`` is ``(N,)`` bool — member i keeps ``new`` iff ``mask[i]``."""
+    return jax.tree.map(
+        lambda a, b: jnp.where(mask.reshape(mask.shape + (1,) * (a.ndim - 1)),
+                               a, b), new, old)
+
+
+def pop_split(keys, num: int = 2):
+    """``jax.random.split`` per member: (N, 2) keys -> ``num`` arrays of
+    (N, 2) keys, matching the stock update's in-step split exactly."""
+    ks = jax.vmap(lambda k: jax.random.split(k, num))(keys)
+    return tuple(ks[:, i] for i in range(num))

@@ -1,8 +1,29 @@
 """Actor/critic networks for SAC/TD3/DQN (the paper's MLP parametrizations).
 
 Standard sizes from Haarnoja et al. / Fujimoto et al.: 256-256 MLPs.
+
+The ``pop_*_apply`` family evaluates the SAME parametrizations over
+member-stacked parameter trees (leaves ``(N, ...)``) and member-batched
+inputs ``(N, B, ...)`` in one population-level call — the layout the
+``kernels/pop_matmul`` Pallas kernel was written for.  Routing is decided
+per linear by ``fused``:
+
+  * ``None`` (auto)  — the kernel on TPU backends when
+    :func:`repro.kernels.pop_matmul.supports_shapes` accepts the tiling;
+    everywhere else a batched-``einsum`` fallback that lowers to the same
+    ``dot_general`` as ``vmap`` of the per-member apply (bitwise identical).
+  * ``True``         — force the kernel (interpret mode off-TPU; CPU
+    validation only), still falling back on untileable shapes.
+  * ``False``        — always the jnp fallback.
+
+The kernel path is differentiable: a ``custom_vjp`` computes the backward
+matmuls as batched einsums, so ``jax.grad`` through a population-level loss
+works on the fused path too (the ``fused_linear`` flag of the rl modules'
+``make_population_update``).
 """
 from __future__ import annotations
+
+import functools
 
 import jax
 import jax.numpy as jnp
@@ -105,3 +126,103 @@ def q_net_apply(params, obs):
     if "torso" in params:
         obs = dqn_torso_apply(params["torso"], obs)
     return mlp_apply(params["head"], obs)
+
+
+# ---------------------------------------------------------------------------
+# population-batched applies (member-stacked params, (N, B, ...) inputs)
+# ---------------------------------------------------------------------------
+
+
+def _use_pop_matmul(fused, x, w) -> bool:
+    if fused is None:
+        use = jax.default_backend() == "tpu"
+    else:
+        use = bool(fused)
+    if not use:
+        return False
+    from repro.kernels.pop_matmul import supports_shapes
+    return supports_shapes(x.shape[1], x.shape[2], w.shape[2])
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def _pop_matmul_vjp(x, w, b, interpret):
+    from repro.kernels.pop_matmul import pop_matmul
+    return pop_matmul(x, w, b, activation="none", interpret=interpret)
+
+
+def _pop_matmul_fwd(x, w, b, interpret):
+    return _pop_matmul_vjp(x, w, b, interpret), (x, w)
+
+
+def _pop_matmul_bwd(interpret, res, dy):
+    # backward matmuls as batched einsums: members are independent, so the
+    # population axis just rides along
+    x, w = res
+    dx = jnp.einsum("nbm,nkm->nbk", dy, w)
+    dw = jnp.einsum("nbk,nbm->nkm", x, dy)
+    db = jnp.sum(dy, axis=1)
+    return dx, dw, db
+
+
+_pop_matmul_vjp.defvjp(_pop_matmul_fwd, _pop_matmul_bwd)
+
+
+def pop_linear_apply(p, x, *, activation: str = "none", fused=None):
+    """Member-stacked linear: ``p`` {"w": (N,K,M), "b": (N,M)}, ``x``
+    (N,B,K) -> act(x @ w + b), (N,B,M).  The jnp fallback lowers to the
+    same batched ``dot_general`` as ``vmap(linear_apply)`` (bitwise)."""
+    w, b = p["w"], p.get("b")
+    if b is not None and _use_pop_matmul(fused, x, w):
+        y = _pop_matmul_vjp(x, w, b, jax.default_backend() != "tpu")
+    else:
+        y = jnp.einsum("nbk,nkm->nbm", x, w)
+        if b is not None:
+            y = y + b[:, None, :]
+    if activation == "relu":
+        y = jax.nn.relu(y)
+    elif activation == "tanh":
+        y = jnp.tanh(y)
+    elif activation != "none":
+        raise ValueError(f"pop_linear_apply: unsupported activation "
+                         f"{activation!r} (none|relu|tanh)")
+    return y
+
+
+def pop_mlp_apply(p, x, *, activation: str = "relu",
+                  final_activation: str | None = None, fused=None):
+    """``mlp_apply`` over member-stacked params — same layer naming, same
+    activation placement, population-level."""
+    n = len(p)
+    for i in range(n):
+        inner = activation if i < n - 1 else (final_activation or "none")
+        x = pop_linear_apply(p[f"layer_{i}"], x, activation=inner,
+                             fused=fused)
+    return x
+
+
+def pop_actor_apply(params, obs, *, fused=None):
+    """Population-level ``actor_apply``: tanh MLP, (N,B,obs) -> (N,B,act)."""
+    return pop_mlp_apply(params, obs, final_activation="tanh", fused=fused)
+
+
+def pop_gaussian_actor_apply(params, obs, *, fused=None):
+    out = pop_mlp_apply(params, obs, fused=fused)
+    mean, log_std = jnp.split(out, 2, axis=-1)
+    return mean, jnp.clip(log_std, -20.0, 2.0)
+
+
+def pop_value_apply(params, obs, *, fused=None):
+    return pop_mlp_apply(params, obs, fused=fused)[..., 0]
+
+
+def pop_critic_apply(params, obs, act, *, fused=None):
+    x = jnp.concatenate([obs, act], axis=-1)
+    return (pop_mlp_apply(params["q1"], x, fused=fused)[..., 0],
+            pop_mlp_apply(params["q2"], x, fused=fused)[..., 0])
+
+
+def pop_q_net_apply(params, obs, *, fused=None):
+    if "torso" in params:
+        raise ValueError("pop_q_net_apply: the Atari conv torso has no "
+                         "population-batched path (MLP q-nets only)")
+    return pop_mlp_apply(params["head"], obs, fused=fused)

@@ -145,3 +145,84 @@ def update(state: PPOState, batch, hypers=None) -> tuple[PPOState, dict]:
     upd, opt = _opt_update(grads, state.opt, lr_override=h["lr"])
     params = apply_updates(state.params, upd)
     return PPOState(params=params, opt=opt, step=state.step + 1), metrics
+
+
+def _member_loss(params, batch, adv, h):
+    """Stock clipped-surrogate loss with explicit args (vmappable)."""
+    logp, entropy = log_prob_entropy(params, batch["obs"], batch["action"])
+    ratio = jnp.exp(logp - batch["log_prob"])
+    clipped = jnp.clip(ratio, 1.0 - h["clip_eps"], 1.0 + h["clip_eps"])
+    pg_loss = -jnp.mean(jnp.minimum(ratio * adv, clipped * adv))
+
+    v = value(params, batch["obs"])
+    v_clip = batch["value"] + jnp.clip(v - batch["value"],
+                                       -h["clip_eps"], h["clip_eps"])
+    v_loss = 0.5 * jnp.mean(jnp.maximum((v - batch["return"]) ** 2,
+                                        (v_clip - batch["return"]) ** 2))
+    ent = jnp.mean(entropy)
+    loss = pg_loss + h["value_coef"] * v_loss - h["entropy_coef"] * ent
+    kl = jnp.mean(batch["log_prob"] - logp)
+    return loss, {"policy_loss": pg_loss, "value_loss": v_loss,
+                  "entropy": ent, "approx_kl": kl}
+
+
+def _pop_log_prob_entropy(params, obs, actions):
+    """Population-level ``log_prob_entropy``: member-stacked params,
+    ``obs`` (N,B,obs), ``actions`` (N,B[,act]) -> (N,B) each."""
+    if "log_std" in params:
+        mean = nets.pop_actor_apply(params["actor"], obs)
+        log_std = params["log_std"][:, None, :]        # (N,1,A) vs (N,B,A)
+        return (nets.gaussian_log_prob(mean, log_std, actions),
+                jnp.broadcast_to(nets.gaussian_entropy(log_std),
+                                 mean.shape[:-1]))
+    logits = nets.pop_mlp_apply(params["actor"], obs)
+    return (nets.categorical_log_prob(logits, actions),
+            nets.categorical_entropy(logits))
+
+
+def make_population_update(*, fused_linear: bool = False, fused=None):
+    """Population-level PPO update: per-member clipped-surrogate gradients
+    with the single Adam application hoisted into
+    ``repro.optim.population_adam`` (see ``repro.rl.fused``)."""
+    from repro.optim.pop_adam import population_adam
+    from repro.rl.fused import pop_hypers
+    _, pa = population_adam(3e-4, fused=fused)
+
+    def pop_loss(params, batch, adv, h):
+        logp, entropy = _pop_log_prob_entropy(params, batch["obs"],
+                                              batch["action"])
+        ratio = jnp.exp(logp - batch["log_prob"])
+        clip_eps = h["clip_eps"][:, None]
+        clipped = jnp.clip(ratio, 1.0 - clip_eps, 1.0 + clip_eps)
+        pg = -jnp.mean(jnp.minimum(ratio * adv, clipped * adv), axis=1)
+
+        v = nets.pop_value_apply(params["critic"], batch["obs"])
+        v_clip = batch["value"] + jnp.clip(v - batch["value"],
+                                           -clip_eps, clip_eps)
+        vl = 0.5 * jnp.mean(jnp.maximum((v - batch["return"]) ** 2,
+                                        (v_clip - batch["return"]) ** 2),
+                            axis=1)
+        ent = jnp.mean(entropy, axis=1)
+        per = pg + h["value_coef"] * vl - h["entropy_coef"] * ent
+        kl = jnp.mean(batch["log_prob"] - logp, axis=1)
+        return jnp.sum(per), {"policy_loss": pg, "value_loss": vl,
+                              "entropy": ent, "approx_kl": kl}
+
+    def update(state: PPOState, batch, hypers=None):
+        n = state.step.shape[0]
+        h = pop_hypers(DEFAULT_HYPERS, hypers, n)
+
+        adv = batch["advantage"]                               # (N, B)
+        adv = (adv - jnp.mean(adv, axis=1, keepdims=True)) / \
+            (jnp.std(adv, axis=1, keepdims=True) + 1e-8)
+
+        if fused_linear:
+            (_, metrics), grads = jax.value_and_grad(
+                pop_loss, has_aux=True)(state.params, batch, adv, h)
+        else:
+            (_, metrics), grads = jax.vmap(jax.value_and_grad(
+                _member_loss, has_aux=True))(state.params, batch, adv, h)
+        params, opt = pa(state.params, grads, state.opt, lr_override=h["lr"])
+        return PPOState(params=params, opt=opt, step=state.step + 1), metrics
+
+    return update

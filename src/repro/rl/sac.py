@@ -112,3 +112,120 @@ def update(state: SACState, batch, hypers=None) -> tuple[SACState, dict]:
                          alpha_opt=alpha_opt, step=state.step + 1, key=key)
     return new_state, {"critic_loss": closs, "actor_loss": aloss,
                        "alpha": jnp.exp(log_alpha)}
+
+
+def _member_critic_loss(critic, actor, target_critic, alpha, batch, k1, h):
+    """Stock critic loss with explicit args (vmappable per member)."""
+    mean, log_std = nets.gaussian_actor_apply(actor, batch["next_obs"])
+    next_a, next_logp = nets.sample_squashed(k1, mean, log_std)
+    tq1, tq2 = nets.critic_apply(target_critic, batch["next_obs"], next_a)
+    target = batch["reward"] * h["reward_scale"] + \
+        h["discount"] * (1 - batch["done"]) * (
+            jnp.minimum(tq1, tq2) - alpha * next_logp)
+    q1, q2 = nets.critic_apply(critic, batch["obs"], batch["action"])
+    target = jax.lax.stop_gradient(target)
+    return jnp.mean((q1 - target) ** 2) + jnp.mean((q2 - target) ** 2)
+
+
+def _member_actor_loss(actor, critic, alpha, batch, k2):
+    mean, log_std = nets.gaussian_actor_apply(actor, batch["obs"])
+    a, logp = nets.sample_squashed(k2, mean, log_std)
+    q1, q2 = nets.critic_apply(critic, batch["obs"], a)
+    return jnp.mean(alpha * logp - jnp.minimum(q1, q2)), logp
+
+
+def _squash(eps, mean, log_std):
+    """``sample_squashed`` with the normal draw supplied (population path:
+    eps is drawn per member outside, the math stays elementwise)."""
+    std = jnp.exp(log_std)
+    pre = mean + std * eps
+    act = jnp.tanh(pre)
+    logp = jnp.sum(
+        -0.5 * (eps ** 2 + 2 * log_std + jnp.log(2 * jnp.pi))
+        - jnp.log(jnp.maximum(1 - act ** 2, 1e-6)), axis=-1)
+    return act, logp
+
+
+def make_population_update(*, fused_linear: bool = False, fused=None):
+    """Population-level SAC: per-member gradients for critic / actor /
+    temperature with all three Adam applications hoisted into
+    ``repro.optim.population_adam`` (see ``repro.rl.fused``)."""
+    from repro.optim.pop_adam import population_adam
+    from repro.rl.fused import pop_hypers, pop_split
+    _, pa = population_adam(3e-4, fused=fused)
+
+    def pop_critic_loss(critic, actor, target_critic, alpha, batch, eps, h):
+        mean, log_std = nets.pop_gaussian_actor_apply(actor,
+                                                      batch["next_obs"])
+        next_a, next_logp = _squash(eps, mean, log_std)
+        tq1, tq2 = nets.pop_critic_apply(target_critic, batch["next_obs"],
+                                         next_a)
+        target = batch["reward"] * h["reward_scale"][:, None] + \
+            h["discount"][:, None] * (1 - batch["done"]) * (
+                jnp.minimum(tq1, tq2) - alpha[:, None] * next_logp)
+        q1, q2 = nets.pop_critic_apply(critic, batch["obs"], batch["action"])
+        target = jax.lax.stop_gradient(target)
+        per = jnp.mean((q1 - target) ** 2, axis=1) + \
+            jnp.mean((q2 - target) ** 2, axis=1)
+        return jnp.sum(per), per
+
+    def pop_actor_loss(actor, critic, alpha, batch, eps):
+        mean, log_std = nets.pop_gaussian_actor_apply(actor, batch["obs"])
+        a, logp = _squash(eps, mean, log_std)
+        q1, q2 = nets.pop_critic_apply(critic, batch["obs"], a)
+        per = jnp.mean(alpha[:, None] * logp - jnp.minimum(q1, q2), axis=1)
+        return jnp.sum(per), (per, logp)
+
+    def update(state: SACState, batch, hypers=None):
+        n = state.step.shape[0]
+        h = pop_hypers(DEFAULT_HYPERS, hypers, n)
+        act_dim = batch["action"].shape[-1]
+        target_entropy = -h["target_entropy_scale"] * act_dim    # (N,)
+        key, k1, k2 = pop_split(state.key, 3)
+        alpha = jnp.exp(state.log_alpha)                          # (N,)
+
+        if fused_linear:
+            draw = lambda ks: jax.vmap(
+                lambda k: jax.random.normal(k, batch["action"].shape[1:]))(ks)
+            (_, closs), cgrads = jax.value_and_grad(
+                pop_critic_loss, has_aux=True)(
+                    state.critic, state.actor, state.target_critic, alpha,
+                    batch, draw(k1), h)
+        else:
+            closs, cgrads = jax.vmap(jax.value_and_grad(_member_critic_loss))(
+                state.critic, state.actor, state.target_critic, alpha,
+                batch, k1, h)
+        critic, critic_opt = pa(state.critic, cgrads, state.critic_opt,
+                                lr_override=h["critic_lr"])
+
+        if fused_linear:
+            (_, (aloss, logp)), agrads = jax.value_and_grad(
+                pop_actor_loss, has_aux=True)(
+                    state.actor, critic, alpha, batch, draw(k2))
+        else:
+            (aloss, logp), agrads = jax.vmap(jax.value_and_grad(
+                _member_actor_loss, has_aux=True))(
+                    state.actor, critic, alpha, batch, k2)
+        actor, actor_opt = pa(state.actor, agrads, state.actor_opt,
+                              lr_override=h["actor_lr"])
+
+        def alpha_loss_m(log_alpha, logp_m, te):
+            return -jnp.mean(jnp.exp(log_alpha) *
+                             jax.lax.stop_gradient(logp_m + te))
+
+        _, lgrad = jax.vmap(jax.value_and_grad(alpha_loss_m))(
+            state.log_alpha, logp, target_entropy)
+        log_alpha, alpha_opt = pa(state.log_alpha, lgrad, state.alpha_opt,
+                                  lr_override=h["alpha_lr"])
+
+        target_critic = jax.tree.map(lambda t, o: (1 - TAU) * t + TAU * o,
+                                     state.target_critic, critic)
+        new_state = SACState(actor=actor, critic=critic,
+                             target_critic=target_critic, log_alpha=log_alpha,
+                             actor_opt=actor_opt, critic_opt=critic_opt,
+                             alpha_opt=alpha_opt, step=state.step + 1,
+                             key=key)
+        return new_state, {"critic_loss": closs, "actor_loss": aloss,
+                           "alpha": jnp.exp(log_alpha)}
+
+    return update

@@ -121,3 +121,88 @@ def update(state: TD3State, batch, hypers=None) -> tuple[TD3State, dict]:
                          target_critic=target_critic, actor_opt=actor_opt,
                          critic_opt=critic_opt, step=state.step + 1, key=key)
     return new_state, {"critic_loss": closs, "actor_loss": aloss}
+
+
+def make_population_update(*, fused_linear: bool = False, fused=None):
+    """Population-level TD3 update: the same decomposition as
+    ``vmap(update)`` but with the two Adam applications hoisted into
+    ``repro.optim.population_adam`` over the whole population (the
+    ``kernels/pop_adam`` path), and — with ``fused_linear`` — the loss
+    forwards routed through the ``pop_matmul``-backed applies in
+    ``repro.rl.networks``.  ``fused`` forwards to ``population_adam``
+    (None = kernel on TPU only)."""
+    from repro.optim.pop_adam import population_adam
+    from repro.rl.fused import pop_hypers, pop_select, pop_split
+    _, pa = population_adam(3e-4, fused=fused)
+
+    def pop_critic_loss(critic, target_actor, target_critic, batch, eps, h):
+        noise = jnp.clip(h["noise"][:, None, None] * eps,
+                         -NOISE_CLIP, NOISE_CLIP)
+        next_a = jnp.clip(
+            nets.pop_actor_apply(target_actor, batch["next_obs"]) + noise,
+            -1.0, 1.0)
+        tq1, tq2 = nets.pop_critic_apply(target_critic, batch["next_obs"],
+                                         next_a)
+        target = batch["reward"] + h["discount"][:, None] * \
+            (1 - batch["done"]) * jnp.minimum(tq1, tq2)
+        q1, q2 = nets.pop_critic_apply(critic, batch["obs"], batch["action"])
+        target = jax.lax.stop_gradient(target)
+        per = jnp.mean((q1 - target) ** 2, axis=1) + \
+            jnp.mean((q2 - target) ** 2, axis=1)
+        # members are independent: the sum's gradient IS the stacked
+        # per-member gradients
+        return jnp.sum(per), per
+
+    def pop_actor_loss(actor, critic, batch):
+        a = nets.pop_actor_apply(actor, batch["obs"])
+        q1, _ = nets.pop_critic_apply(critic, batch["obs"], a)
+        per = -jnp.mean(q1, axis=1)
+        return jnp.sum(per), per
+
+    def update(state: TD3State, batch, hypers=None):
+        n = state.step.shape[0]
+        h = pop_hypers(DEFAULT_HYPERS, hypers, n)
+        key, kc = pop_split(state.key)
+
+        if fused_linear:
+            eps = jax.vmap(
+                lambda k: jax.random.normal(k, batch["action"].shape[1:]))(kc)
+            (_, closs), cgrads = jax.value_and_grad(
+                pop_critic_loss, has_aux=True)(
+                    state.critic, state.target_actor, state.target_critic,
+                    batch, eps, h)
+        else:
+            closs, cgrads = jax.vmap(jax.value_and_grad(critic_loss_fn))(
+                state.critic, state.target_actor, state.target_critic,
+                batch, kc, h)
+        critic, critic_opt = pa(state.critic, cgrads, state.critic_opt,
+                                lr_override=h["critic_lr"])
+
+        f = h["policy_freq"]
+        step_f = state.step.astype(jnp.float32)
+        do_actor = jnp.floor((step_f + 1) * f) > jnp.floor(step_f * f)
+
+        if fused_linear:
+            (_, aloss), agrads = jax.value_and_grad(
+                pop_actor_loss, has_aux=True)(state.actor, critic, batch)
+        else:
+            aloss, agrads = jax.vmap(jax.value_and_grad(actor_loss_fn))(
+                state.actor, critic, batch)
+        actor_new, actor_opt_new = pa(state.actor, agrads, state.actor_opt,
+                                      lr_override=h["actor_lr"])
+
+        actor = pop_select(do_actor, actor_new, state.actor)
+        actor_opt = pop_select(do_actor, actor_opt_new, state.actor_opt)
+        target_actor = pop_select(do_actor,
+                                  _soft_update(state.target_actor, actor),
+                                  state.target_actor)
+        target_critic = _soft_update(state.target_critic, critic)
+
+        new_state = TD3State(actor=actor, critic=critic,
+                             target_actor=target_actor,
+                             target_critic=target_critic, actor_opt=actor_opt,
+                             critic_opt=critic_opt, step=state.step + 1,
+                             key=key)
+        return new_state, {"critic_loss": closs, "actor_loss": aloss}
+
+    return update

@@ -121,6 +121,7 @@ class RolloutEngine:
                                          num_steps=self.num_steps,
                                          donate=False, mesh=mesh)
 
+        self.donate = pcfg.donate
         if self.kind == "replay":
             # the skip branch of the can-sample gate must return metrics of
             # the same structure as a real update — resolve shapes
@@ -145,6 +146,7 @@ class RolloutEngine:
         else:
             iteration = self._build_onpolicy()
 
+        self._iteration_fn = iteration   # un-jitted; build_epoch fuses it
         self._iteration = jax.jit(
             iteration, donate_argnums=(0, 1, 2) if pcfg.donate else ())
 
@@ -249,6 +251,88 @@ class RolloutEngine:
                     jnp.ones((), bool))
 
         return iteration
+
+    # -------------------------------------------------- fused train–evolve
+    def build_epoch(self, *, epoch_len: int, eval_every: int = 0,
+                    evolve_fn=None, donate: bool | None = None):
+        """Fuse an ENTIRE train–evolve epoch into one jitted donated call.
+
+        ``epoch_len`` iterations run in a ``lax.scan`` over the un-jitted
+        fused iteration; every ``eval_every``-th iteration additionally
+        scores the population with the deterministic evaluator into an
+        on-device fitness accumulator (``eval_every=0`` disables); after
+        the scan, ``evolve_fn`` — a pure strategy step from
+        ``EvolutionStrategy.evolve_fn()`` — exploits/explores on the
+        epoch-mean fitness.  Nothing leaves the device: not the per-member
+        parameters between iterations, not the fitness between evaluation
+        and evolve, not the strategy's distribution state (threaded through
+        as ``strat_state``).
+
+        The key chain reproduces the unfused driver bitwise: one split per
+        iteration, one extra split on evaluation iterations, one before the
+        evolve — the exact sequence ``PopTrainer.env_iteration`` /
+        ``evaluate_fitness`` / ``evolve`` performs eagerly.
+
+        Returns the jitted
+
+            epoch(state, bufs, vstate, hypers, strat_state, key) ->
+                (state, bufs, vstate, hypers, strat_state, key,
+                 metrics_stack, stats_stack, did_stack, evals, fitness,
+                 lineage)
+
+        where the stacks carry a leading ``(epoch_len,)`` axis, ``evals``
+        is the ``(num_evals, N)`` per-evaluation fitness record, and
+        ``fitness`` / ``lineage`` describe the evolve (identity lineage
+        when ``evolve_fn`` is None).
+        """
+        iteration = self._iteration_fn
+        evaluator = self.evaluator
+        agent = self.agent
+        n = self.n
+        n_evals = (epoch_len // eval_every) if eval_every else 0
+        if donate is None:
+            donate = self.donate
+
+        def epoch(state, bufs, vstate, hypers, strat_state, key):
+            evals0 = jnp.zeros((max(n_evals, 1), n))
+
+            def body(carry, i):
+                state, bufs, vstate, key, evals = carry
+                key, k_it = jax.random.split(key)
+                state, bufs, vstate, metrics, stats, did = iteration(
+                    state, bufs, vstate, hypers, k_it)
+                if n_evals:
+                    def do_eval(args):
+                        key, evals = args
+                        key, k_ev = jax.random.split(key)
+                        fit = evaluator.evaluate(
+                            agent.actor_params(state), k_ev)
+                        return key, evals.at[
+                            (i + 1) // eval_every - 1].set(fit)
+                    key, evals = jax.lax.cond(
+                        (i + 1) % eval_every == 0, do_eval,
+                        lambda args: args, (key, evals))
+                return ((state, bufs, vstate, key, evals),
+                        (metrics, stats, did))
+
+            carry0 = (state, bufs, vstate, key, evals0)
+            (state, bufs, vstate, key, evals), (metrics, stats, dids) = \
+                jax.lax.scan(body, carry0, jnp.arange(epoch_len))
+
+            # the same reduction the trainer's fitness window performs:
+            # mean over this epoch's evaluation rows, per member
+            fitness = (jnp.mean(evals, axis=0) if n_evals
+                       else jnp.zeros((n,)))
+            if evolve_fn is not None:
+                key, k_evolve = jax.random.split(key)
+                state, hypers, lineage, strat_state = evolve_fn(
+                    k_evolve, state, hypers, fitness, strat_state)
+            else:
+                lineage = jnp.arange(n)
+            return (state, bufs, vstate, hypers, strat_state, key,
+                    metrics, stats, dids, evals, fitness, lineage)
+
+        return jax.jit(epoch, donate_argnums=(0, 1, 2) if donate else ())
 
     # ------------------------------------------------------------- stepping
     def iterate(self, state, hypers, key):

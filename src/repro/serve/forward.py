@@ -22,6 +22,7 @@ all four algorithms.
 from __future__ import annotations
 
 import jax
+import jax.numpy as jnp
 
 
 class PolicyForward:
@@ -31,10 +32,19 @@ class PolicyForward:
     extras)`` — the same callable the Collector/Evaluator drive; here it is
     always called with ``key=None, hypers=None`` (deterministic head,
     exploration off) and extras are discarded.
+
+    ``members_fn`` optionally replaces the default ``vmap``-of-``member``
+    ensemble evaluation with a POPULATION-level forward
+    ``members_fn(actors, obs) -> (M, B, ...)`` — the
+    ``repro.rl.networks.pop_*_apply`` family, which routes its linears
+    through ``kernels/pop_matmul`` on TPU (see :meth:`fused_for_agent`).
+    The jnp fallback of those applies lowers to the same batched
+    ``dot_general`` as the vmap, so switching it on never changes actions.
     """
 
-    def __init__(self, policy_fn):
+    def __init__(self, policy_fn, members_fn=None):
         self.policy_fn = policy_fn
+        self._members_fn = members_fn
 
     def member(self, actor, obs):
         """One member's deterministic actions on an observation batch."""
@@ -48,6 +58,8 @@ class PolicyForward:
         """Every member of a stacked param tree on the SAME observation
         batch -> actions with a leading member axis ``(M, B, ...)`` — the
         ensemble-inference shape ``BatchServer`` reduces over."""
+        if self._members_fn is not None:
+            return self._members_fn(actors, obs)
         return jax.vmap(self.member, in_axes=(0, None))(actors, obs)
 
     @classmethod
@@ -57,3 +69,55 @@ class PolicyForward:
         training share one policy definition, not two."""
         from repro.rollout.collector import default_exploration
         return cls(default_exploration(agent))
+
+    @classmethod
+    def fused_for_agent(cls, agent, *, fused=None) -> "PolicyForward":
+        """Like :meth:`for_agent`, but the ensemble call evaluates every
+        member through ONE population-batched forward
+        (``repro.rl.networks.pop_*_apply``, the ``kernels/pop_matmul``
+        layout) instead of ``vmap`` over per-member applies.  Single-member
+        evaluation (:meth:`member`) is untouched, so the Evaluator parity
+        contract of ``tests/test_serve.py`` holds by construction.
+
+        ``fused`` is the per-linear routing knob of the pop applies (None =
+        kernel on TPU where tileable, True = force/interpret, False = jnp).
+        Falls back to the default forward for agents without a recognized
+        deterministic head (e.g. the Atari conv torso).
+        """
+        from repro.rl import networks as nets
+
+        name = getattr(agent.module, "__name__", "").rsplit(".", 1)[-1]
+
+        def broadcast(obs, actors):
+            m = jax.tree.leaves(actors)[0].shape[0]
+            return jnp.broadcast_to(obs[None], (m,) + obs.shape)
+
+        if name == "td3":
+            def members_fn(actors, obs):
+                return nets.pop_actor_apply(actors, broadcast(obs, actors),
+                                            fused=fused)
+        elif name == "sac":
+            def members_fn(actors, obs):
+                mean, _ = nets.pop_gaussian_actor_apply(
+                    actors, broadcast(obs, actors), fused=fused)
+                return jnp.tanh(mean)
+        elif name == "dqn":
+            def members_fn(actors, obs):
+                q = nets.pop_q_net_apply(actors, broadcast(obs, actors),
+                                         fused=fused)
+                return jnp.argmax(q, axis=-1)
+        elif name == "ppo":
+            def members_fn(actors, obs):
+                obs_b = broadcast(obs, actors["actor"])
+                if "log_std" in actors:   # continuous: the tanh mean
+                    return nets.pop_actor_apply(actors["actor"], obs_b,
+                                                fused=fused)
+                logits = nets.pop_mlp_apply(actors["actor"], obs_b,
+                                            fused=fused)
+                return jnp.argmax(logits, axis=-1)
+        else:
+            return cls.for_agent(agent)
+
+        fwd = cls.for_agent(agent)
+        fwd._members_fn = members_fn
+        return fwd
