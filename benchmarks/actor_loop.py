@@ -32,6 +32,18 @@ per second, iteration time relative to population 1 (the paper's
 minimal-overhead claim), and the fused-over-unfused speedup.
 ``--json PATH`` additionally dumps the rows as JSON for trend tracking
 (same row schema for both algos).
+
+``--num-envs N[,N...]`` switches to the OVERLAP sweep instead: serial
+fused vs the pipelined ``policy_lag=1`` engine on the physics env
+(``hopper2d``) at GPU-sim env counts.  Each cell runs a K-iteration PBT
+driver loop — every iteration ends with the host fitness read every
+PBT/CEM driver performs — because that read is exactly the sync the
+overlapped engine hides: the serial program must finish collect+update
+before the stats materialize, while the overlapped engine hands back the
+previous slot's stats immediately and keeps the device busy underneath
+the host's bookkeeping and dispatch.  Rows land in the same
+``kind="bench"`` JSONL schema, with steady-state recompiles counted via
+``repro.compat.register_compile_listener`` (must be 0).
 """
 import argparse
 import time
@@ -40,6 +52,7 @@ import jax
 import numpy as np
 
 from benchmarks.common import emit, write_rows
+from repro import compat
 from repro.configs.base import PopulationConfig
 from repro.data import buffer_add, buffer_sample
 from repro.envs import make
@@ -189,6 +202,145 @@ def _unfused_ppo_iteration(agent, trainer, collect_steps):
 EPOCH_LEN = 4   # iterations per fused-epoch program (one jitted call)
 
 
+# ---------------------------------------------------------------- overlap
+def _sweep_trainer(env_name, num_envs, impl, *, pop, collect_steps,
+                   num_updates, batch_size):
+    """One sweep cell: a td3 population on the physics env, either the
+    serial fused engine (``impl="fused"``) or the double-buffered
+    ``policy_lag=1`` engine (``impl="overlap"``)."""
+    env = make(env_name)
+    agent = ModuleAgent(td3, env.spec.obs_dim, env.spec.act_dim,
+                        hidden=HIDDEN)
+    # donate=False is load-bearing for BOTH arms: CPU PJRT cannot enqueue
+    # a program whose donated inputs are still being computed (the donated
+    # buffer must materialize before it can be aliased), so donation turns
+    # the async-dispatch pipeline back into lockstep execution — measured
+    # here as every dispatch blocking for one full program.  On real
+    # accelerators donation and async dispatch compose; on this backend
+    # the sweep measures the pipeline, so it trades the buffer reuse away.
+    pcfg = PopulationConfig(size=pop, strategy="none", backend="vectorized",
+                            num_steps=num_updates, donate=False)
+    trainer = PopTrainer(agent, pcfg, seed=0)
+    trainer.attach_rollout(
+        env, num_envs=num_envs, collect_steps=collect_steps,
+        batch_size=batch_size,
+        # a few iterations of history; capacity scales with the insert
+        # size so the 4096-env arm doesn't allocate a 10M-step ring
+        buffer_capacity=4 * num_envs * collect_steps,
+        eval_envs=1, policy_lag=(1 if impl == "overlap" else None))
+    return trainer
+
+
+def _pbt_driver(trainer, k_iters):
+    """A K-iteration PBT driver loop as one timed unit.
+
+    Every iteration ends with the host fitness read PBT/CEM drivers do
+    (``np.asarray`` on the episode stats).  For the serial engine that
+    read waits for the whole collect+update program; for the overlapped
+    engine the stats belong to the already-materialized previous slot, so
+    the read returns immediately while the device keeps working.  The
+    final drain blocks on everything (state, buffers, env state, pending
+    slot) so the pipeline can't leak work past the timer."""
+    eng = trainer.rollout
+
+    def run_once():
+        best = -np.inf
+        for _ in range(k_iters):
+            _, stats, _ = trainer.env_iteration()
+            fit = float(np.asarray(jax.tree.leaves(stats)[0]).mean())
+            best = max(best, fit)
+        jax.block_until_ready((trainer.state, eng.bufs, eng.vstate,
+                               getattr(eng, "_pending", None)))
+        return best
+
+    return run_once
+
+
+def run_overlap_sweep(num_envs_list=(256, 1024, 4096), env_name="hopper2d",
+                      pop=2, collect_steps=4, num_updates=2, batch_size=64,
+                      k_iters=8, rounds=5, json_path=None):
+    """Serial fused vs overlapped (policy_lag=1) per-iteration wall time
+    across GPU-sim env counts.  Timed unit = a K-iteration driver loop
+    with per-iteration host fitness reads (see :func:`_pbt_driver`);
+    rounds are interleaved across cells in rotating order and the
+    per-cell MEDIAN round is kept — unlike :func:`_timed_rounds`'s
+    minimum, a median compares sustained throughput: on a time-shared
+    box the program execution time itself varies ±10%, so a minimum
+    rewards whichever arm got the luckiest scheduler draw rather than
+    the schedule under test.  Steady-state recompiles during the timed
+    rounds are counted per cell and must be zero.
+
+    Expectation management: the overlap win is the host-side work hidden
+    under the in-flight collect, so it needs the host to have somewhere
+    to run — a second core (the CI runners) or a real accelerator (where
+    the device computes on its own silicon).  On a single-core host every
+    schedule spends the same CPU cycles and the split+pipeline overhead
+    (~1–3%) is the whole story; the JSONL records whatever this box can
+    actually show, it does not assume the win."""
+    emit(["bench", "env", "impl", "pop", "num_envs", "ms_per_iter",
+          "env_steps_per_s_per_member", "overlap_speedup",
+          "steady_compiles"])
+    cells = {}
+    for num_envs in num_envs_list:
+        for impl in ("fused", "overlap"):
+            trainer = _sweep_trainer(env_name, num_envs, impl, pop=pop,
+                                     collect_steps=collect_steps,
+                                     num_updates=num_updates,
+                                     batch_size=batch_size)
+            cells[(num_envs, impl)] = _pbt_driver(trainer, k_iters)
+    for fn in cells.values():   # warm: compile + fill buffers past `can`
+        fn()
+
+    compiles = {k: 0 for k in cells}
+    current = [None]
+
+    def _on_compile(_event, _secs):
+        if current[0] is not None:
+            compiles[current[0]] += 1
+
+    unregister = compat.register_compile_listener(_on_compile)
+    samples = {k: [] for k in cells}
+    order = list(cells)
+    try:
+        for r in range(rounds):
+            # rotate the start cell so scheduler drift over the run does
+            # not systematically favour whichever arm runs first
+            for key in order[r % len(order):] + order[:r % len(order)]:
+                current[0] = key
+                t0 = time.perf_counter()
+                cells[key]()
+                samples[key].append(time.perf_counter() - t0)
+                current[0] = None
+    finally:
+        if unregister is not None:
+            unregister()
+
+    med = {k: float(np.median(v)) for k, v in samples.items()}
+    rows = []
+    for num_envs in num_envs_list:
+        for impl in ("fused", "overlap"):
+            t_iter = med[(num_envs, impl)] / k_iters
+            row = {"bench": "actor_loop_overlap", "algo": "td3",
+                   "env": env_name, "impl": impl, "pop": pop,
+                   "num_envs": num_envs, "collect_steps": collect_steps,
+                   "ms_per_iter": round(1e3 * t_iter, 3),
+                   "env_steps_per_s_per_member": round(
+                       num_envs * collect_steps / t_iter, 1),
+                   "overlap_speedup": (round(
+                       med[(num_envs, "fused")]
+                       / med[(num_envs, "overlap")], 3)
+                       if impl == "overlap" else None),
+                   "steady_compiles": compiles[(num_envs, impl)]}
+            rows.append(row)
+            emit([row[k] for k in ("bench", "env", "impl", "pop",
+                                   "num_envs", "ms_per_iter",
+                                   "env_steps_per_s_per_member",
+                                   "overlap_speedup", "steady_compiles")])
+    if json_path:
+        write_rows(rows, json_path)
+    return rows
+
+
 def run(pop_sizes=(1, 2, 4, 8, 16), algos=("td3", "ppo"), num_envs=1,
         collect_steps=256, num_updates=2, batch_size=16, epochs=1,
         iters=10, json_path=None):
@@ -254,8 +406,19 @@ if __name__ == "__main__":
     ap.add_argument("--fast", action="store_true",
                     help="smaller pops / fewer iters (CI mode)")
     ap.add_argument("--json", default=None, help="also dump rows as JSON")
+    ap.add_argument("--num-envs", default=None,
+                    help="comma list (e.g. 256,1024,4096): run the "
+                         "serial-vs-overlap sweep on the physics env "
+                         "instead of the fused/unfused comparison")
     args = ap.parse_args()
-    if args.fast:
+    if args.num_envs is not None:
+        sizes = tuple(int(s) for s in args.num_envs.split(","))
+        if args.fast:
+            run_overlap_sweep(sizes, k_iters=6, rounds=2,
+                              json_path=args.json)
+        else:
+            run_overlap_sweep(sizes, json_path=args.json)
+    elif args.fast:
         run(pop_sizes=(1, 2, 4), collect_steps=64, iters=3,
             json_path=args.json)
     else:

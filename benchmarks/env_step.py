@@ -5,20 +5,64 @@ interactions that THREADS the env state and observation through the loop
 (the previous version re-timed one captured transition over and over), so
 what is reported is the steady-state cost of a real acting step: policy
 forward + physics + auto-reset, amortized over the scan.
+
+Two arms per env:
+
+  * ``single`` — one env, one agent: the per-interaction latency floor
+    (what a Python step loop would pay per call, minus the dispatch).
+  * ``batched`` — ``pop`` members x ``num_envs`` envs, double-vmapped
+    (member axis outside, env axis inside — the ``repro.rollout`` layout).
+    Reported per-interaction time divides by the full batch, and
+    ``steps_per_s_per_member`` is the acting throughput each population
+    member sees — the number the GPU-sim scaling story is about.
+
+``hopper2d`` (the physics-grade tier: 4 rigid bodies, spring joints,
+penalty contacts, 5 substeps of semi-implicit Euler) sits alongside the
+classic-control envs so the table shows how the acting cost model changes
+when the env stops being a toy: classic control is dispatch-bound at
+batch 1 and policy-bound at batch 4096; hopper2d is physics-bound
+throughout.  ``--json`` dumps ``kind="bench"`` JSONL rows.
 """
+import argparse
+
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import emit, timeit
+from benchmarks.common import emit, timeit, write_rows
 from repro.envs import make
 from repro.rl import dqn, sac, td3
 
-ENVS = ("pendulum", "reacher", "mountain_car", "cartpole", "acrobot")
+ENVS = ("pendulum", "reacher", "mountain_car", "cartpole", "acrobot",
+        "hopper2d")
+
+# Cap total interactions per timed call so the 4096-env arm stays a
+# sub-second call on CPU while small arms still amortize dispatch.
+_MAX_STEPS_PER_CALL = 262_144
 
 
-def run(iters=5, steps_per_call=256):
-    emit(["bench", "env", "agent", "ms_per_interaction"])
+def _steady_fn(env, mod, agent_name, steps):
+    """Jitted scan of ``steps`` interactions for ONE (params, state, obs)."""
+
+    def steady(params, state, obs, k):
+        def body(carry, _):
+            state, obs, k = carry
+            k, ka = jax.random.split(k)
+            a = mod.policy(params, obs, ka)
+            state, _, reward, _, _ = env.step(state, a)
+            return (state, env.observe(state), k), reward
+
+        carry, rewards = jax.lax.scan(
+            body, (state, obs, k), None, length=steps)
+        return carry, rewards.sum()
+
+    return steady
+
+
+def run(iters=5, steps_per_call=256, pop=4, num_envs=1024, json_path=None):
+    emit(["bench", "env", "agent", "impl", "pop", "num_envs",
+          "us_per_interaction", "steps_per_s_per_member"])
     key = jax.random.PRNGKey(0)
+    rows = []
     for env_name in ENVS:
         env = make(env_name)
         if env.spec.discrete:
@@ -29,24 +73,58 @@ def run(iters=5, steps_per_call=256):
             st = mod.init(key, env.spec.obs_dim, env.spec.act_dim)
             params = st.q if agent_name == "dqn" else st.actor
 
-            @jax.jit
-            def steady(state, obs, k, params=params, mod=mod, env=env):
-                def body(carry, _):
-                    state, obs, k = carry
-                    k, ka = jax.random.split(k)
-                    a = mod.policy(params, obs, ka)
-                    state, _, reward, _, _ = env.step(state, a)
-                    return (state, env.observe(state), k), reward
-
-                carry, rewards = jax.lax.scan(
-                    body, (state, obs, k), None, length=steps_per_call)
-                return carry, rewards.sum()
-
-            state, obs = env.reset(key)
-            t = timeit(lambda: steady(state, obs, key), iters=iters)
-            emit(["env_step", env_name, agent_name,
-                  round(1e3 * t / steps_per_call, 4)])
+            for impl, n, e in (("single", 1, 1),
+                               ("batched", pop, num_envs)):
+                total = n * e
+                steps = max(8, min(steps_per_call,
+                                   _MAX_STEPS_PER_CALL // total))
+                steady = _steady_fn(env, mod, agent_name, steps)
+                if impl == "batched":
+                    # member axis outside, env axis inside — the rollout
+                    # engine's layout: per-member policy params, a batch
+                    # of envs under each member
+                    steady = jax.vmap(jax.vmap(steady,
+                                               in_axes=(None, 0, 0, 0)))
+                    pk = jax.random.split(key, n)
+                    pparams = jax.vmap(
+                        lambda k: mod.init(k, env.spec.obs_dim,
+                                           env.spec.act_dim))(pk)
+                    pparams = (pparams.q if agent_name == "dqn"
+                               else pparams.actor)
+                    rk = jax.random.split(key, total).reshape(
+                        (n, e) + (2,))
+                    state, obs = jax.vmap(jax.vmap(env.reset))(rk)
+                    args = (pparams, state, obs, rk)
+                else:
+                    state, obs = env.reset(key)
+                    args = (params, state, obs, key)
+                fn = jax.jit(steady)
+                t = timeit(lambda: fn(*args), iters=iters)
+                per_member = e * steps / t
+                row = {"bench": "env_step", "env": env_name,
+                       "agent": agent_name, "impl": impl, "pop": n,
+                       "num_envs": e,
+                       "us_per_interaction": round(
+                           1e6 * t / (total * steps), 4),
+                       "steps_per_s_per_member": round(per_member, 1)}
+                rows.append(row)
+                emit([row[k] for k in ("bench", "env", "agent", "impl",
+                                       "pop", "num_envs",
+                                       "us_per_interaction",
+                                       "steps_per_s_per_member")])
+    if json_path:
+        write_rows(rows, json_path)
+    return rows
 
 
 if __name__ == "__main__":
-    run()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="smaller batch / fewer iters (CI mode)")
+    ap.add_argument("--json", default=None, help="also dump rows as JSON")
+    args = ap.parse_args()
+    if args.fast:
+        run(iters=3, steps_per_call=64, pop=2, num_envs=256,
+            json_path=args.json)
+    else:
+        run(json_path=args.json)

@@ -1,10 +1,25 @@
 """Roofline report: reads the dry-run artifact (dryrun_results.json) and
 prints the per-(arch x shape x mesh) three-term table plus the
-MODEL_FLOPS / HLO_FLOPS usefulness ratio (task spec §Roofline)."""
+MODEL_FLOPS / HLO_FLOPS usefulness ratio (task spec §Roofline).
+
+``--fused-epoch`` adds a modeled-vs-measured arm for the RL side: the
+fused train–evolve epoch (``RolloutEngine.build_epoch``) is AOT-compiled,
+its XLA cost analysis (flops / bytes accessed) is divided by
+micro-benchmarked machine peaks (a square matmul for flops, a streaming
+add for bandwidth), and the resulting roofline time
+``max(flops/peak_flops, bytes/peak_bw)`` is printed next to the measured
+steady-state wall time of the compiled program.  The ratio says how far
+the fused program sits from the machine's roofline — small nets on CPU
+are expected to land memory-bound and several x off peak (dispatch-free,
+but op-granularity-bound); the number is the honest gap report."""
+import argparse
 import json
 import os
 
-from benchmarks.common import emit
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, timeit, write_rows
 from repro.configs import LM_SHAPES, get_config
 from repro.models.accounting import model_flops, param_count, active_param_count
 
@@ -48,5 +63,92 @@ def run(path=None, single_pod_only=False):
               round(ratio, 3), round(hbm, 2)])
 
 
+def _machine_peaks():
+    """Micro-benchmark this box: sustained matmul flops and streaming
+    memory bandwidth — the two roofline ceilings."""
+    n = 512
+    a = jnp.ones((n, n), jnp.float32)
+    mm = jax.jit(lambda a, b: a @ b)
+    t = timeit(lambda: mm(a, a), iters=5)
+    peak_flops = 2.0 * n ** 3 / t
+    m = 1 << 23   # 32 MB float32: far past any cache on this box
+    x = jnp.ones((m,), jnp.float32)
+    add = jax.jit(lambda x: x + 1.0)
+    t = timeit(lambda: add(x), iters=5)
+    peak_bw = 2.0 * 4.0 * m / t   # one read + one write per element
+    return peak_flops, peak_bw
+
+
+def run_fused_epoch(algo="td3", pop=4, epoch_len=4, num_envs=4,
+                    collect_steps=64, json_path=None):
+    """Modeled-vs-measured roofline for the fused train–evolve epoch."""
+    from repro.configs.base import PopulationConfig
+    from repro.envs import make
+    from repro.pop import ModuleAgent, PopTrainer
+    from repro.rl import td3 as td3_mod
+
+    env = make("pendulum")
+    agent = ModuleAgent(td3_mod, env.spec.obs_dim, env.spec.act_dim,
+                        hidden=(32, 32))
+    # donate=False so the compiled program can be re-invoked on the same
+    # arguments for steady-state timing
+    pcfg = PopulationConfig(size=pop, strategy="none",
+                            backend="vectorized", num_steps=2,
+                            donate=False)
+    trainer = PopTrainer(agent, pcfg, seed=0)
+    trainer.attach_rollout(env, num_envs=num_envs,
+                           collect_steps=collect_steps, batch_size=64,
+                           buffer_capacity=10_000, eval_envs=1)
+    engine = trainer.rollout
+    epoch_fn = engine.build_epoch(epoch_len=epoch_len, eval_every=0,
+                                  donate=False)
+    args = (trainer.state, engine.bufs, engine.vstate, trainer.hypers,
+            trainer.strategy.export_state(), trainer.key)
+    compiled = epoch_fn.lower(*args).compile()
+
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):   # older jax: one dict per device
+        ca = ca[0] if ca else {}
+    flops = float(ca.get("flops", 0.0))
+    bytes_accessed = float(ca.get("bytes accessed", 0.0))
+
+    peak_flops, peak_bw = _machine_peaks()
+    t_compute = flops / peak_flops
+    t_memory = bytes_accessed / peak_bw
+    t_modeled = max(t_compute, t_memory)
+    t_measured = timeit(lambda: compiled(*args), iters=5)
+
+    emit(["bench", "algo", "pop", "epoch_len", "gflops", "mbytes",
+          "t_modeled_ms", "t_measured_ms", "bound", "roofline_gap"])
+    row = {"bench": "roofline_fused_epoch", "algo": algo, "pop": pop,
+           "epoch_len": epoch_len, "num_envs": num_envs,
+           "collect_steps": collect_steps,
+           "gflops": round(flops / 1e9, 4),
+           "mbytes": round(bytes_accessed / 1e6, 3),
+           "peak_gflops_per_s": round(peak_flops / 1e9, 2),
+           "peak_gb_per_s": round(peak_bw / 1e9, 2),
+           "t_modeled_ms": round(1e3 * t_modeled, 3),
+           "t_measured_ms": round(1e3 * t_measured, 3),
+           "bound": "compute" if t_compute >= t_memory else "memory",
+           "roofline_gap": (round(t_measured / t_modeled, 2)
+                            if t_modeled > 0 else None)}
+    emit([row[k] for k in ("bench", "algo", "pop", "epoch_len", "gflops",
+                           "mbytes", "t_modeled_ms", "t_measured_ms",
+                           "bound", "roofline_gap")])
+    if json_path:
+        write_rows([row], json_path)
+    return row
+
+
 if __name__ == "__main__":
-    run()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fused-epoch", action="store_true",
+                    help="modeled-vs-measured roofline of the fused "
+                         "train-evolve epoch instead of the LM dry-run "
+                         "table")
+    ap.add_argument("--json", default=None, help="dump rows as JSONL")
+    args = ap.parse_args()
+    if args.fused_epoch:
+        run_fused_epoch(json_path=args.json)
+    else:
+        run()

@@ -89,39 +89,57 @@ def restore_elastic(trainer, directory=None, *, step=None, layout=None):
             f"manager.peek_extra() (None when empty) before calling, or "
             f"start fresh")
 
-    template = (trainer.state, trainer.strategy.export_state())
-    (state, strat_state), extra = mgr.restore(template, step)
-    hypers = None if trainer.hypers is None else \
-        mgr.restore_aux("hypers", trainer.hypers, step)
-    old_n = extra.get("size")
-    if old_n is None:
-        old_n = jax.tree.leaves(trainer.agent.actor_params(state))[0].shape[0]
-    fitness = extra.get("fitness")
-    if old_n != trainer.n and fitness is None:
-        import warnings
-        warnings.warn(
-            "restore_elastic: checkpoint has no fitness record; resizing "
-            f"{old_n} -> {trainer.n} by member index, not by fitness",
-            stacklevel=2)
-    parents, lineage = plan_resize(old_n, trainer.n, fitness)
-
-    state = resize_tree(state, old_n, parents)
-    if hypers is not None:
-        hypers = resize_tree(hypers, old_n, parents)
-
-    place = layout.place if layout is not None else trainer._placement()
-    trainer.state = place(state)
-    if hypers is not None:   # keep freshly-drawn hypers when the source
-        trainer.hypers = place(hypers)  # run had none (null strategy)
-    if strat_state is not None:
-        trainer.strategy.import_state(strat_state)
-
+    # The post-resize iteration's shapes depend only on the NEW topology
+    # (the freshly-built trainer state / engine buffers), so its AOT
+    # compile (jit(...).lower().compile()) can start NOW, on a background
+    # thread, and overlap the restore + resize_tree data movement below —
+    # re-layout and first recompile used to serialize (the PR 3 residual).
+    # The join happens before returning; compiles are labeled "resize".
+    join_aot = None
     if trainer._rollout is not None:
-        rstate = mgr.restore_aux("rollout",
-                                 trainer._rollout.export_state(), step)
-        if rstate is not None:
-            rstate = resize_tree(rstate, old_n, parents)
-            trainer._rollout.import_state(place(rstate))
+        join_aot = trainer._rollout.warm_compile_async(
+            trainer.state, trainer.hypers, trainer.key)
+
+    with trainer.telemetry.compile_scope("resize"):
+        template = (trainer.state, trainer.strategy.export_state())
+        (state, strat_state), extra = mgr.restore(template, step)
+        hypers = None if trainer.hypers is None else \
+            mgr.restore_aux("hypers", trainer.hypers, step)
+        old_n = extra.get("size")
+        if old_n is None:
+            old_n = jax.tree.leaves(
+                trainer.agent.actor_params(state))[0].shape[0]
+        fitness = extra.get("fitness")
+        if old_n != trainer.n and fitness is None:
+            import warnings
+            warnings.warn(
+                "restore_elastic: checkpoint has no fitness record; "
+                f"resizing {old_n} -> {trainer.n} by member index, not by "
+                f"fitness", stacklevel=2)
+        parents, lineage = plan_resize(old_n, trainer.n, fitness)
+
+        state = resize_tree(state, old_n, parents)
+        if hypers is not None:
+            hypers = resize_tree(hypers, old_n, parents)
+
+        place = layout.place if layout is not None else trainer._placement()
+        trainer.state = place(state)
+        if hypers is not None:   # keep freshly-drawn hypers when the source
+            trainer.hypers = place(hypers)  # run had none (null strategy)
+        if strat_state is not None:
+            trainer.strategy.import_state(strat_state)
+
+        if trainer._rollout is not None:
+            rstate = mgr.restore_aux("rollout",
+                                     trainer._rollout.export_state(), step)
+            if rstate is not None:
+                rstate = resize_tree(rstate, old_n, parents)
+                trainer._rollout.import_state(place(rstate))
+
+        if join_aot is not None:
+            # total resize wall = max(compile, data movement), not the sum;
+            # a compile failure is non-fatal (the engine stays on lazy jit)
+            join_aot()
 
     trainer.step_count = extra["step"] + 1
     trainer.last_fitness = None if fitness is None else \

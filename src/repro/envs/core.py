@@ -37,6 +37,9 @@ from typing import Callable
 import jax
 import jax.numpy as jnp
 
+from repro.envs.hopper2d import (_hopper2d_obs, _hopper2d_reset,
+                                 _hopper2d_step)
+
 
 @dataclass(frozen=True)
 class EnvSpec:
@@ -276,6 +279,10 @@ _REGISTRY = {
                      _mountain_car_obs),
     "acrobot": (EnvSpec("acrobot", 6, 3, True, 500),
                 _acrobot_reset, _acrobot_step, _acrobot_obs),
+    # the physics tier (repro.envs.hopper2d): rigid-body planar hopper,
+    # expensive enough per step that GPU-sim-scale acting is real work
+    "hopper2d": (EnvSpec("hopper2d", 11, 3, False, 400, 1.0),
+                 _hopper2d_reset, _hopper2d_step, _hopper2d_obs),
 }
 
 

@@ -91,7 +91,9 @@ def _run_rl(args):
                          checkpoint_dir=args.ckpt_dir, telemetry=telemetry)
     trainer.attach_rollout(env, num_envs=args.num_envs,
                            collect_steps=args.collect_steps,
-                           batch_size=args.batch, epochs=args.epochs)
+                           batch_size=args.batch, epochs=args.epochs,
+                           policy_lag=args.policy_lag,
+                           chunk_steps=args.chunk_steps)
     if args.resume == "auto":
         meta = trainer._mgr.peek_extra()   # strict: size/fitness guaranteed
         if (args.resize == "auto" and meta is not None
@@ -137,6 +139,21 @@ def main(argv=None):
                     help="pure-JAX env name for the --algo workload")
     ap.add_argument("--num-envs", type=int, default=8)
     ap.add_argument("--collect-steps", type=int, default=32)
+    ap.add_argument("--policy-lag", type=int, default=None,
+                    choices=[0, 1],
+                    help="overlapped acting engine (repro.rollout."
+                    "OverlapEngine): 0 = split collect/update programs, "
+                    "serial schedule (bitwise-equal to the fused "
+                    "iteration); 1 = pipelined — collect(t+1) is enqueued "
+                    "before the host blocks on update(t), acting params "
+                    "one update stale; default: serial fused engine "
+                    "(incompatible with --fused-epoch at lag 1)")
+    ap.add_argument("--chunk-steps", type=int, default=None,
+                    help="collect in chunks of this many acting steps, "
+                    "folding each chunk into the experience store so "
+                    "memory stays bounded at thousands of envs per member "
+                    "(must divide --collect-steps; results are bitwise-"
+                    "identical to unchunked)")
     ap.add_argument("--updates-per-iter", type=int, default=32,
                     help="chained off-policy updates per fused iteration")
     ap.add_argument("--epochs", type=int, default=4,

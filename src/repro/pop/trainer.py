@@ -155,20 +155,35 @@ class PopTrainer:
         ``pcfg.num_steps`` chained updates for replay agents, collect->
         GAE->``epochs`` x shuffled minibatches for trajectory (ppo) agents;
         ``pcfg.backend`` picks the update implementation either way.
-        Returns the engine."""
+
+        ``policy_lag`` (None, 0 or 1) selects the overlapped engine
+        (``repro.rollout.OverlapEngine``): 0 is the split-program parity
+        anchor (bitwise-equal to the serial engine), 1 pipelines collect
+        against update with one-update-stale acting params.
+        ``chunk_steps`` bounds collect memory at GPU-sim env counts
+        (either engine).  Returns the engine."""
         from repro.rollout.engine import RolloutEngine
+        from repro.rollout.overlap import OverlapEngine
         if self._mgr is not None and self.pcfg.donate:
             raise ValueError(
                 "donate=True is unsafe with a checkpoint_dir: save_async "
                 "may still be serializing the population state when the "
                 "next fused iteration donates (and overwrites) its buffers "
                 "— build the PopulationConfig with donate=False")
+        policy_lag = engine_kwargs.pop("policy_lag", None)
         self.key, k = jax.random.split(self.key)
         engine_kwargs.setdefault("mesh", self.mesh)
         engine_kwargs.setdefault("telemetry", self.telemetry)
-        self._rollout = RolloutEngine(self.agent, self.pcfg, env, key=k,
-                                      init_state=self.state,
-                                      hypers=self.hypers, **engine_kwargs)
+        if policy_lag is None:
+            self._rollout = RolloutEngine(self.agent, self.pcfg, env, key=k,
+                                          init_state=self.state,
+                                          hypers=self.hypers, **engine_kwargs)
+        else:
+            self._rollout = OverlapEngine(self.agent, self.pcfg, env, key=k,
+                                          init_state=self.state,
+                                          hypers=self.hypers,
+                                          policy_lag=policy_lag,
+                                          **engine_kwargs)
         return self._rollout
 
     @property
@@ -200,7 +215,7 @@ class PopTrainer:
             return self.rollout.evaluator.evaluate(self.actors, k)
 
     def run_env_loop(self, iters: int, *, eval_every: int = 1, on_iter=None,
-                     fused: bool = False):
+                     fused: bool = False, block_every: int = 0):
         """Drive ``iters`` fused iterations.  Every ``eval_every`` iterations
         the evaluator scores the population into the fitness window, and —
         exactly like ``step`` — the strategy evolves every
@@ -221,12 +236,26 @@ class PopTrainer:
         dividing it, the per-epoch evaluation count within
         ``fitness_window``, an epoch-aligned ``step_count`` and an empty
         fitness window when evolution is active.
+
+        ``block_every=N`` (eager loop only) blocks on the iteration's
+        metrics every N iterations under ``telemetry.block``, splitting the
+        telemetry into dispatch time (``phases``) vs wait time (``blocks``)
+        — the instrumentation that makes the overlap win visible: a serial
+        engine's block covers the whole iteration, an overlapped engine's
+        only the update (acting is already enqueued behind it and is never
+        waited on).  Blocking is a measurement choice, so it is off by
+        default in the hot path.
         """
         if fused:
+            if block_every:
+                raise ValueError("block_every instruments the eager loop; "
+                                 "fused epochs are one device program")
             return self._run_env_loop_fused(iters, eval_every, on_iter)
         metrics = stats = None
         for it in range(iters):
             metrics, stats, did = self.env_iteration()
+            if block_every and (it + 1) % block_every == 0:
+                self.telemetry.block("iterate", metrics)
             fitness = None
             if eval_every and (it + 1) % eval_every == 0:
                 fitness = self.evaluate_fitness()

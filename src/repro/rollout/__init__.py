@@ -11,3 +11,4 @@ from repro.rollout.collector import (  # noqa: F401
 )
 from repro.rollout.evaluator import Evaluator  # noqa: F401
 from repro.rollout.engine import RolloutEngine, transition_spec  # noqa: F401
+from repro.rollout.overlap import OverlapEngine  # noqa: F401

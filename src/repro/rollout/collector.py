@@ -10,6 +10,16 @@ device-resident replay buffers; ``flat=False`` keeps them time-major
 ``(N, num_steps, num_envs, ...)`` for the on-policy pipeline (GAE needs the
 time axis).
 
+Chunked collection (GPU-sim scale): with thousands of envs per member the
+materialized trajectory — ``num_steps × num_envs`` transitions per member —
+is the memory high-water mark of the whole iteration.  ``chunk_steps``
+re-shapes the scan into scan-of-scans (``num_steps // chunk_steps`` chunks
+of ``chunk_steps``) so ``collect`` still returns the full trajectory with
+an identical key chain, while ``collect_into`` folds each chunk straight
+into the experience store (``add_fn``) and never materializes more than one
+chunk — bitwise-identical to collect-then-add because the FIFO ring inserts
+chunks at exactly the positions the whole-trajectory insert would use.
+
 The exploration policy contract is
 ``policy_fn(actor_params, obs, key, hypers) -> actions`` OR
 ``-> (actions, extras)`` with per-member (unstacked) arguments; ``extras``
@@ -93,38 +103,74 @@ class Collector:
         """Population-stacked VecEnvState (leaves (N, E, ...))."""
         return jax.vmap(self.venv.reset)(jax.random.split(key, n))
 
+    def _member_scan(self, actor, mvstate, mkey, mhypers, num_steps: int):
+        """One member's acting scan: ``num_steps`` steps, one key split per
+        step.  Returns ``(vstate, key, traj)`` with the carried key so
+        chunked collection can continue the SAME split chain across chunks
+        (the bitwise-parity anchor for chunking)."""
+        def body(carry, _):
+            vs, k = carry
+            k, ka = jax.random.split(k)
+            actions, extras = split_actions(
+                self.policy_fn(actor, vs.obs, ka, mhypers))
+            vs, trans = self.venv.step(vs, actions)
+            return (vs, k), {**trans, **extras}
+
+        (vs, k), traj = jax.lax.scan(body, (mvstate, mkey), None,
+                                     length=num_steps)
+        return vs, k, traj
+
+    def _flatten(self, traj, num_steps: int):
+        # (T, E, ...) -> (T*E, ...), time-major per env so FIFO eviction
+        # drops oldest first
+        return jax.tree.map(
+            lambda x: x.reshape((num_steps * self.venv.num_envs,)
+                                + x.shape[2:]), traj)
+
+    @staticmethod
+    def _chunks(num_steps: int, chunk_steps):
+        if chunk_steps is None:
+            return 1, num_steps
+        if num_steps % chunk_steps:
+            raise ValueError(
+                f"chunk_steps={chunk_steps} must divide num_steps={num_steps}")
+        return num_steps // chunk_steps, chunk_steps
+
     def collect(self, actors, vstate, key, num_steps: int, hypers=None,
-                *, flat: bool = True):
+                *, flat: bool = True, chunk_steps=None):
         """Act ``num_steps`` batched steps.  Returns ``(vstate, traj)`` with
         traj leaves ``(N, num_steps * num_envs, ...)`` in insertion order
         (time-major per env so FIFO eviction drops oldest first), or
         time-major ``(N, num_steps, num_envs, ...)`` with ``flat=False``
         (the on-policy shape).  Any extras the policy emits are recorded
-        alongside the transition fields.
+        alongside the transition fields.  ``chunk_steps`` runs the scan as
+        scan-of-scans (identical results; bounds the scan body for XLA) —
+        to bound trajectory MEMORY too, use :meth:`collect_into`.
 
         A population of 1 runs the member body directly (no outer vmap):
         same results, but XLA CPU compiles size-1-vmapped scans to
         pathologically slow code (~4x), and the paper's contract is that
         size 1 costs exactly one agent."""
         n = jax.tree.leaves(vstate)[0].shape[0]
+        n_chunks, chunk = self._chunks(num_steps, chunk_steps)
 
         def member(actor, mvstate, mkey, mhypers):
-            def body(carry, _):
-                vs, k = carry
-                k, ka = jax.random.split(k)
-                actions, extras = split_actions(
-                    self.policy_fn(actor, vs.obs, ka, mhypers))
-                vs, trans = self.venv.step(vs, actions)
-                return (vs, k), {**trans, **extras}
+            if n_chunks == 1:
+                vs, _, traj = self._member_scan(actor, mvstate, mkey,
+                                                mhypers, num_steps)
+            else:
+                def outer(carry, _):
+                    vs, k = carry
+                    vs, k, traj = self._member_scan(actor, vs, k, mhypers,
+                                                    chunk)
+                    return (vs, k), traj
 
-            (vs, _), traj = jax.lax.scan(body, (mvstate, mkey), None,
-                                         length=num_steps)
-            if flat:
-                # (T, E, ...) -> (T*E, ...)
+                (vs, _), traj = jax.lax.scan(outer, (mvstate, mkey), None,
+                                             length=n_chunks)
+                # (C, chunk, E, ...) -> (T, E, ...)
                 traj = jax.tree.map(
-                    lambda x: x.reshape((num_steps * self.venv.num_envs,)
-                                        + x.shape[2:]), traj)
-            return vs, traj
+                    lambda x: x.reshape((num_steps,) + x.shape[2:]), traj)
+            return vs, self._flatten(traj, num_steps) if flat else traj
 
         member_keys = jax.random.split(key, n)
         if n == 1:
@@ -133,3 +179,37 @@ class Collector:
                               None if hypers is None else one(hypers))
             return jax.tree.map(lambda x: x[None], (vs, traj))
         return jax.vmap(member)(actors, vstate, member_keys, hypers)
+
+    def collect_into(self, actors, vstate, bufs, add_fn, key, num_steps: int,
+                     chunk_steps, hypers=None, *, flat: bool = True):
+        """Chunked collect-and-store: act ``num_steps`` steps as
+        ``num_steps // chunk_steps`` chunks, folding each chunk into the
+        per-member experience store with ``add_fn(buf, chunk_traj)`` —
+        memory stays bounded by ONE chunk per member instead of the whole
+        trajectory.  Bitwise-identical to ``collect`` + one add: the key
+        chain is the same (one carried key, one split per step) and FIFO /
+        trajectory stores insert chunks at exactly the positions a single
+        whole-trajectory insert would use.  Returns ``(vstate, bufs)``."""
+        n = jax.tree.leaves(vstate)[0].shape[0]
+        n_chunks, chunk = self._chunks(num_steps, chunk_steps)
+
+        def member(actor, mvstate, mbuf, mkey, mhypers):
+            def outer(carry, _):
+                vs, buf, k = carry
+                vs, k, traj = self._member_scan(actor, vs, k, mhypers, chunk)
+                if flat:
+                    traj = self._flatten(traj, chunk)
+                return (vs, add_fn(buf, traj), k), None
+
+            (vs, buf, _), _ = jax.lax.scan(outer, (mvstate, mbuf, mkey),
+                                           None, length=n_chunks)
+            return vs, buf
+
+        member_keys = jax.random.split(key, n)
+        if n == 1:
+            one = lambda t: jax.tree.map(lambda x: x[0], t)
+            vs, buf = member(one(actors), one(vstate), one(bufs),
+                             member_keys[0],
+                             None if hypers is None else one(hypers))
+            return jax.tree.map(lambda x: x[None], (vs, buf))
+        return jax.vmap(member)(actors, vstate, bufs, member_keys, hypers)

@@ -41,8 +41,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.vectorize import chain_steps
-from repro.data.experience import (compute_gae, experience_ops,
-                                   transition_spec)
+from repro.data.experience import (compute_gae, experience_ops, traj_add,
+                                   traj_reset, transition_spec)
 from repro.data.replay_buffer import buffer_sample
 from repro.pop.backend import make_update
 from repro.rollout.collector import Collector, default_exploration
@@ -60,12 +60,14 @@ class RolloutEngine:
     knobs that drive ``PopTrainer.step``.
     """
 
+    policy_lag = None   # serial engine; OverlapEngine overrides
+
     def __init__(self, agent, pcfg, env, *, key, init_state, hypers=None,
                  num_envs: int = 8, collect_steps: int = 32,
                  batch_size: int = 128, buffer_capacity: int = 100_000,
                  epochs: int = 4, eval_envs: int = 4,
                  eval_steps: int | None = None, explore_fn=None, mesh=None,
-                 telemetry=None):
+                 telemetry=None, chunk_steps: int | None = None):
         self.agent = agent
         self.telemetry = telemetry
         self.env = env
@@ -73,6 +75,10 @@ class RolloutEngine:
         self.num_envs = num_envs
         self.collect_steps = collect_steps
         self.batch_size = batch_size
+        if chunk_steps is not None and collect_steps % chunk_steps:
+            raise ValueError(f"chunk_steps={chunk_steps} must divide "
+                             f"collect_steps={collect_steps}")
+        self.chunk_steps = chunk_steps
         self.kind = getattr(agent, "experience_kind", "replay")
         self.exp = experience_ops(self.kind)
 
@@ -149,6 +155,9 @@ class RolloutEngine:
         self._iteration_fn = iteration   # un-jitted; build_epoch fuses it
         self._iteration = jax.jit(
             iteration, donate_argnums=(0, 1, 2) if pcfg.donate else ())
+        # what iterate() actually calls: the jit wrapper, unless an
+        # AOT-compiled executable was installed (warm_compile_async)
+        self._iteration_exec = self._iteration
 
         if telemetry is not None and telemetry.enabled:
             # the acting-side shape of the run, once, so a log is
@@ -158,8 +167,34 @@ class RolloutEngine:
                 "engine", algo=type(agent).__name__, experience=self.kind,
                 env=env.spec.name, population=self.n, num_envs=num_envs,
                 collect_steps=collect_steps, batch_size=batch_size,
-                num_steps=self.num_steps,
+                num_steps=self.num_steps, chunk_steps=chunk_steps,
+                policy_lag=self.policy_lag,
                 env_steps_per_iteration=self.env_steps_per_iteration)
+
+    # --------------------------------------------------------- collect side
+    def _collect_insert(self, actors, bufs, vstate, hypers, kc):
+        """Collect one iteration's experience and store it: the collect-then
+        -add pair both fused iterations share.  With ``chunk_steps`` set the
+        trajectory is folded into the store chunk-by-chunk
+        (``Collector.collect_into``) so memory stays bounded by one chunk
+        per member instead of ``collect_steps × num_envs`` transitions —
+        bitwise-identical results either way.  Returns ``(bufs, vstate)``."""
+        flat = self.kind == "replay"
+        if self.chunk_steps is not None:
+            if not flat:
+                # on-policy: one rollout REPLACES the last (exp.add resets
+                # then appends); chunked filling resets once, then appends
+                bufs = jax.vmap(traj_reset)(bufs)
+                add_fn = traj_add
+            else:
+                add_fn = self.exp.add
+            vstate, bufs = self.collector.collect_into(
+                actors, vstate, bufs, add_fn, kc, self.collect_steps,
+                self.chunk_steps, hypers, flat=flat)
+            return bufs, vstate
+        vstate, traj = self.collector.collect(
+            actors, vstate, kc, self.collect_steps, hypers, flat=flat)
+        return jax.vmap(self.exp.add)(bufs, traj), vstate
 
     # ----------------------------------------------------- off-policy fused
     def _build_offpolicy(self):
@@ -168,9 +203,8 @@ class RolloutEngine:
         def iteration(state, bufs, vstate, hypers, key):
             kc, ks = jax.random.split(key)
             actors = self.agent.actor_params(state)
-            vstate, traj = self.collector.collect(
-                actors, vstate, kc, self.collect_steps, hypers)
-            bufs = jax.vmap(self.exp.add)(bufs, traj)
+            bufs, vstate = self._collect_insert(actors, bufs, vstate,
+                                                hypers, kc)
             can = jnp.all(jax.vmap(
                 lambda b: self.exp.ready(b, B))(bufs))
 
@@ -237,14 +271,11 @@ class RolloutEngine:
         return batches
 
     def _build_onpolicy(self):
-        T = self.collect_steps
-
         def iteration(state, bufs, vstate, hypers, key):
             kc, kp = jax.random.split(key)
             actors = self.agent.actor_params(state)
-            vstate, traj = self.collector.collect(
-                actors, vstate, kc, T, hypers, flat=False)
-            bufs = jax.vmap(self.exp.add)(bufs, traj)
+            bufs, vstate = self._collect_insert(actors, bufs, vstate,
+                                                hypers, kc)
             batches = self.population_batches(bufs, actors, hypers, kp)
             state, metrics = self._update_k(state, batches, hypers)
             return (state, bufs, vstate, metrics, episode_stats(vstate),
@@ -338,9 +369,61 @@ class RolloutEngine:
     def iterate(self, state, hypers, key):
         """One fused train iteration; returns the new population state plus
         ``(metrics, episode_stats, did_update)``."""
-        state, self.bufs, self.vstate, metrics, stats, did = \
-            self._iteration(state, self.bufs, self.vstate, hypers, key)
+        try:
+            out = self._iteration_exec(state, self.bufs, self.vstate,
+                                       hypers, key)
+        except Exception:
+            if self._iteration_exec is self._iteration:
+                raise
+            # an AOT executable only accepts the exact shapes it was
+            # lowered for — fall back to the jit wrapper permanently
+            self._iteration_exec = self._iteration
+            out = self._iteration_exec(state, self.bufs, self.vstate,
+                                       hypers, key)
+        state, self.bufs, self.vstate, metrics, stats, did = out
         return state, metrics, stats, did
+
+    # ---------------------------------------------------- AOT warm compile
+    def warm_compile_async(self, state, hypers, key):
+        """Start compiling the fused iteration ahead-of-time on a background
+        thread (``jit(...).lower().compile()``) and return a ``join()``
+        callable.  ``join()`` blocks until compilation finishes, installs
+        the compiled executable as this engine's iteration (the lowered
+        Compiled object does NOT populate the jit dispatch cache, so it must
+        be kept and called directly), and returns the compile error if any
+        (None on success — errors mean the engine just stays on the lazy jit
+        path).
+
+        This is the PR 3 residual closer: ``repro.elastic.restore_elastic``
+        calls this before moving checkpoint data so the post-resize
+        recompile overlaps the re-layout instead of serializing after it.
+        """
+        import threading
+
+        abstract = lambda t: jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(jnp.shape(x),
+                                           jnp.result_type(x)), t)
+        args = (abstract(state), abstract(self.bufs), abstract(self.vstate),
+                None if hypers is None else abstract(hypers), abstract(key))
+        box = {}
+
+        def work():
+            try:
+                box["compiled"] = self._iteration.lower(*args).compile()
+            except Exception as e:          # pragma: no cover - defensive
+                box["error"] = e
+
+        thread = threading.Thread(target=work, daemon=True,
+                                  name="repro-aot-compile")
+        thread.start()
+
+        def join():
+            thread.join()
+            if "compiled" in box:
+                self._iteration_exec = box["compiled"]
+            return box.get("error")
+
+        return join
 
     # -------------------------------------------------- elastic re-layout
     def export_state(self):

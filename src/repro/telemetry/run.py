@@ -76,6 +76,7 @@ class RunTelemetry:
         self.run_id = run_id or _run_id()
         self._t0 = time.perf_counter()
         self._phases: dict[str, float] = {}
+        self._blocks: dict[str, float] = {}
         self._compile_label = "warmup"
         self.compile_count = 0
         self.compile_secs = 0.0
@@ -110,6 +111,23 @@ class RunTelemetry:
             dt = time.perf_counter() - t0
             self._phases[name] = self._phases.get(name, 0.0) + dt
 
+    def block(self, name: str, value):
+        """The other half of the dispatch/block split: wait for ``value``'s
+        arrays to materialize (``jax.block_until_ready``) and accumulate
+        the wait into the iteration row's ``blocks`` dict.  ``phases``
+        measure what the host *spends* enqueueing work; ``blocks`` measure
+        what it *waits* for — a serial engine's block covers the whole
+        iteration (block ≈ wall), an overlapped engine's only the update,
+        because acting for the next iteration is already enqueued behind it
+        and never waited on.  Blocking is a measurement choice: call sites
+        opt in (``run_env_loop(block_every=...)``, benchmark drivers), the
+        hot path never blocks.  Returns ``value``."""
+        t0 = time.perf_counter()
+        jax.block_until_ready(value)
+        dt = time.perf_counter() - t0
+        self._blocks[name] = self._blocks.get(name, 0.0) + dt
+        return value
+
     # --------------------------------------------------------------- rows
     def record(self, kind: str, **fields):
         """Emit one generic row (stamped with ``t``).  The escape hatch for
@@ -127,6 +145,10 @@ class RunTelemetry:
             self._compile_label = "steady"
         row = {"kind": "iter", "t": self._stamp(), "step": step,
                "phases": phases, **extra}
+        if self._blocks:
+            row["blocks"] = {k: round(v, 6)
+                             for k, v in self._blocks.items()}
+            self._blocks.clear()
         if metrics is not None:
             row["metrics"] = metrics
         if stats is not None:

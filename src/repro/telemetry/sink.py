@@ -43,7 +43,14 @@ import numpy as np
 # listed here is legal (user-defined rows) but only checked for kind/t.
 ROW_KINDS: dict[str, tuple] = {
     "run": ("run_id",),                      # header: config, devices, ...
-    "iter": ("step", "phases"),              # per-iteration phase timings
+    "iter": ("step", "phases"),              # per-iteration timings:
+    #   "phases" — host DISPATCH wall-clock per phase (time spent
+    #     enqueueing device work; never includes waiting on results);
+    #   "blocks" (optional) — host WAIT wall-clock per name
+    #     (``RunTelemetry.block``: timed ``jax.block_until_ready``).
+    #   Serial engine: block ≈ device wall per iteration.  Overlapped
+    #   engine (policy_lag=1): block covers only the update — collect
+    #   dispatch hides under it, which is the overlap win report.py shows.
     "members": ("step",),                    # per-member fitness/hypers
     "evolve": ("step", "parents"),           # lineage event
     "compile": ("event", "secs", "label"),   # one XLA compilation

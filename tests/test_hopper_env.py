@@ -1,0 +1,238 @@
+"""hopper2d physics pinned against an independent numpy integrator.
+
+The env is written as closed-form jnp math precisely so this file can
+re-derive every force term in pure numpy — from the same module-level
+constant tables, but none of the jax code — and require the two
+integrators to agree to float32 tolerance over multiple control steps.
+Plus the env-contract battery every registered env gets: spec shapes,
+vmapped reset/step, auto-reset truncation, determinism, stability, and a
+rollout-engine smoke run.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.envs import make
+from repro.envs.hopper2d import (_CONTACTS, _H2D, _JOINTS, _REST_POS,
+                                 _hopper2d_reset, _hopper2d_step)
+
+
+# ------------------------------------------------- numpy reference model
+def _np_rot(th, off):
+    c, s = np.cos(th), np.sin(th)
+    lx, lz = off
+    return np.array([c * lx - s * lz, s * lx + c * lz])
+
+
+def _np_point_vel(vel, om, r):
+    return vel + om * np.array([-r[1], r[0]])
+
+
+def _np_cross2(r, f):
+    return r[0] * f[1] - r[1] * f[0]
+
+
+def _np_forces(pos, th, vel, om, action):
+    m = np.array(_H2D["mass"])
+    f = np.zeros((4, 2))
+    f[:, 1] -= _H2D["gravity"] * m
+    tau = np.zeros(4)
+    for j, (p, ra, c, rb, lo, hi) in enumerate(_JOINTS):
+        wa = _np_rot(th[p], ra)
+        wb = _np_rot(th[c], rb)
+        dx = (pos[p] + wa) - (pos[c] + wb)
+        dv = (_np_point_vel(vel[p], om[p], wa)
+              - _np_point_vel(vel[c], om[c], wb))
+        fj = _H2D["joint_k"] * dx + _H2D["joint_c"] * dv
+        f[c] += fj
+        f[p] -= fj
+        tau[c] += _np_cross2(wb, fj)
+        tau[p] += _np_cross2(wa, -fj)
+        rel = th[c] - th[p]
+        tj = (_H2D["torque"][j] * action[j]
+              - _H2D["rot_c"] * (om[c] - om[p])
+              - _H2D["limit_k"] * (max(rel - hi, 0.0) + min(rel - lo, 0.0)))
+        tau[c] += tj
+        tau[p] -= tj
+    for b, off in _CONTACTS:
+        r = _np_rot(th[b], off)
+        p_w = pos[b] + r
+        v_w = _np_point_vel(vel[b], om[b], r)
+        pen = max(-p_w[1], 0.0)
+        if pen > 0.0:
+            fn = max(_H2D["contact_k"] * pen
+                     - _H2D["contact_c"] * v_w[1], 0.0)
+            ft = (-_H2D["friction"] * fn
+                  * np.tanh(v_w[0] / _H2D["v_smooth"]))
+            fc = np.array([ft, fn])
+            f[b] += fc
+            tau[b] += _np_cross2(r, fc)
+    return f, tau
+
+
+def _np_control_step(pos, th, vel, om, action):
+    """One control step: SUBSTEPS semi-implicit Euler substeps, float64
+    numpy throughout (the jnp side is float32 — tolerance absorbs it)."""
+    m = np.array(_H2D["mass"])
+    L = np.array(_H2D["length"])
+    inertia = m * L ** 2 / 12.0
+    dt = _H2D["dt"]
+    a = np.clip(np.asarray(action, np.float64), -1.0, 1.0)
+    for _ in range(_H2D["substeps"]):
+        f, tau = _np_forces(pos, th, vel, om, a)
+        vel = vel + dt * f / m[:, None]
+        om = om + dt * tau / inertia
+        pos = pos + dt * vel
+        th = th + dt * om
+    return pos, th, vel, om
+
+
+# -------------------------------------------------------- integrator pin
+@pytest.mark.parametrize("action", [
+    np.zeros(3),
+    np.array([0.7, -0.4, 0.9]),
+    np.array([-1.0, 1.0, -1.0]),
+])
+def test_integrator_matches_numpy_reference(action):
+    """3 control steps (15 substeps) from a post-reset state must agree
+    with the independent float64 numpy integrator to f32 tolerance."""
+    state, _ = _hopper2d_reset(jax.random.PRNGKey(3))
+    pos = np.asarray(state["pos"], np.float64)
+    th = np.asarray(state["th"], np.float64)
+    vel = np.asarray(state["vel"], np.float64)
+    om = np.asarray(state["om"], np.float64)
+    for step in range(3):
+        state, _, _, _ = _hopper2d_step(state, jnp.asarray(action,
+                                                           jnp.float32))
+        pos, th, vel, om = _np_control_step(pos, th, vel, om, action)
+        for name, jx, ref in (("pos", state["pos"], pos),
+                              ("th", state["th"], th),
+                              ("vel", state["vel"], vel),
+                              ("om", state["om"], om)):
+            np.testing.assert_allclose(
+                np.asarray(jx), ref, rtol=2e-4, atol=2e-4,
+                err_msg=f"{name} diverged at control step {step}")
+
+
+def test_reward_is_forward_progress():
+    state, _ = _hopper2d_reset(jax.random.PRNGKey(0))
+    a = jnp.zeros(3)
+    new, _, reward, _ = _hopper2d_step(state, a)
+    fwd = (new["pos"][0, 0] - state["pos"][0, 0]) / (
+        _H2D["dt"] * _H2D["substeps"])
+    np.testing.assert_allclose(float(reward), float(fwd) + 1.0, rtol=1e-5)
+
+
+def test_termination_on_fallen_torso():
+    state, _ = _hopper2d_reset(jax.random.PRNGKey(0))
+    fallen = dict(state, pos=state["pos"].at[0, 1].set(0.5))
+    _, _, _, term = _hopper2d_step(fallen, jnp.zeros(3))
+    assert bool(term)
+    tipped = dict(state, th=state["th"].at[0].set(1.5))
+    _, _, _, term = _hopper2d_step(tipped, jnp.zeros(3))
+    assert bool(term)
+
+
+# ---------------------------------------------------------- env contract
+def test_registry_spec_and_shapes():
+    env = make("hopper2d")
+    assert env.spec.obs_dim == 11 and env.spec.act_dim == 3
+    assert not env.spec.discrete
+    assert env.spec.episode_length == 400
+    state, obs = env.reset(jax.random.PRNGKey(0))
+    assert obs.shape == (11,)
+    state, obs, reward, done, info = env.step(state, jnp.zeros(3))
+    assert obs.shape == (11,) and reward.shape == () and done.shape == ()
+
+
+def test_vmapped_reset_and_step():
+    env = make("hopper2d")
+    keys = jax.random.split(jax.random.PRNGKey(0), 16)
+    state, obs = jax.vmap(env.reset)(keys)
+    assert obs.shape == (16, 11)
+    actions = jax.random.uniform(jax.random.PRNGKey(1), (16, 3),
+                                 minval=-1, maxval=1)
+    state, obs, reward, done, info = jax.vmap(env.step)(state, actions)
+    assert obs.shape == (16, 11) and reward.shape == (16,)
+    assert np.isfinite(np.asarray(obs)).all()
+
+
+def test_determinism():
+    env = make("hopper2d")
+    outs = []
+    for _ in range(2):
+        state, obs = env.reset(jax.random.PRNGKey(5))
+        for i in range(10):
+            state, obs, reward, done, _ = env.step(
+                state, jnp.sin(jnp.arange(3) + i))
+        outs.append((np.asarray(obs), float(reward)))
+    np.testing.assert_array_equal(outs[0][0], outs[1][0])
+    assert outs[0][1] == outs[1][1]
+
+
+def test_stability_under_random_policy():
+    """200 random-torque control steps stay finite and physically bounded
+    (no spring blow-up), and the auto-reset keeps episodes alive."""
+    env = make("hopper2d")
+    state, obs = env.reset(jax.random.PRNGKey(2))
+    key = jax.random.PRNGKey(9)
+
+    @jax.jit
+    def roll(state, obs, key):
+        def body(carry, _):
+            state, obs, key = carry
+            key, ka = jax.random.split(key)
+            a = jax.random.uniform(ka, (3,), minval=-1, maxval=1)
+            state, obs, reward, done, _ = env.step(state, a)
+            return (state, obs, key), (obs, reward)
+
+        return jax.lax.scan(body, (state, obs, key), None, length=200)
+
+    (state, obs, _), (all_obs, rewards) = roll(state, obs, key)
+    assert np.isfinite(np.asarray(all_obs)).all()
+    assert np.isfinite(np.asarray(rewards)).all()
+    assert np.abs(np.asarray(all_obs)).max() < 100.0
+
+
+def test_stands_under_zero_action():
+    """With zero torques from rest the hopper must keep standing: the
+    joint springs hold the articulation against gravity, so across 300
+    control steps the torso stays above the termination height and below
+    launch height — a lightly-damped bounce on the leg springs is fine
+    (the contact is a penalty spring), collapse or blow-up is not."""
+    env = make("hopper2d")
+    state, obs = env.reset(jax.random.PRNGKey(11))
+
+    @jax.jit
+    def roll(state):
+        def body(s, _):
+            s, _, _, _, _ = env.step(s, jnp.zeros(3))
+            return s, s["pos"][0, 1]
+
+        return jax.lax.scan(body, state, None, length=300)
+
+    state, torso_z = roll(state)
+    z = np.asarray(torso_z)
+    assert z.min() > _H2D["z_min"] and z.max() < 1.4
+    assert np.abs(np.asarray(state["vel"])).max() < 5.0
+
+
+def test_rollout_engine_smoke():
+    """The physics tier plugs into the full fused engine: two td3
+    iterations on hopper2d produce finite params and metrics."""
+    from repro.configs.base import PopulationConfig
+    from repro.pop import PopTrainer
+    from repro.rl import make_agent
+
+    env = make("hopper2d")
+    pcfg = PopulationConfig(size=2, strategy="none", backend="vectorized",
+                            num_steps=1, donate=False)
+    tr = PopTrainer(make_agent("td3", env.spec, hidden=(8, 8)), pcfg,
+                    seed=0)
+    tr.attach_rollout(env, num_envs=2, collect_steps=8, batch_size=16,
+                      buffer_capacity=256, eval_envs=1, eval_steps=10)
+    for _ in range(2):
+        metrics, stats, did = tr.env_iteration()
+    assert all(np.isfinite(np.asarray(x)).all()
+               for x in jax.tree.leaves(tr.state))

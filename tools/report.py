@@ -155,11 +155,10 @@ def fitness_series(rows):
             if m.get("fitness") is not None]
 
 
-def phase_summary(rows):
-    """``{phase: {"secs": total, "iters": n, "ms_per_iter": mean}}``."""
+def _timer_summary(rows, field):
     out: dict[str, dict] = {}
     for it in by_kind(rows, "iter"):
-        for name, secs in (it.get("phases") or {}).items():
+        for name, secs in (it.get(field) or {}).items():
             d = out.setdefault(name, {"secs": 0.0, "iters": 0})
             d["secs"] += secs
             d["iters"] += 1
@@ -167,6 +166,20 @@ def phase_summary(rows):
         d["secs"] = round(d["secs"], 4)
         d["ms_per_iter"] = round(1e3 * d["secs"] / max(1, d["iters"]), 3)
     return out
+
+
+def phase_summary(rows):
+    """``{phase: {"secs": total, "iters": n, "ms_per_iter": mean}}`` over
+    the iter rows' ``phases`` (host DISPATCH time per phase)."""
+    return _timer_summary(rows, "phases")
+
+
+def block_summary(rows):
+    """Same aggregation over the iter rows' optional ``blocks`` (host WAIT
+    time, ``RunTelemetry.block``).  dispatch ≪ block ≈ wall means the run
+    was serial; a small block next to real device work means the wait was
+    hidden under enqueued-ahead work (the overlapped engine's signature)."""
+    return _timer_summary(rows, "blocks")
 
 
 def compile_summary(rows):
@@ -221,8 +234,17 @@ def report(rows, out=sys.stdout) -> None:
     phases = phase_summary(rows)
     if phases:
         iters = by_kind(rows, "iter")
-        w(f"\nphases ({len(iters)} iterations)\n")
+        w(f"\nphases ({len(iters)} iterations; dispatch time)\n")
         for name, d in sorted(phases.items(), key=lambda kv:
+                              -kv[1]["secs"]):
+            w(f"  {name:<10} {d['secs']:>9.3f}s total  "
+              f"{d['ms_per_iter']:>9.3f} ms/iter  ({d['iters']} iters)\n")
+
+    blocks = block_summary(rows)
+    if blocks:
+        w("blocks (block-until-ready wait time; serial: block ≈ wall — "
+          "overlapped: collect hides under the update block)\n")
+        for name, d in sorted(blocks.items(), key=lambda kv:
                               -kv[1]["secs"]):
             w(f"  {name:<10} {d['secs']:>9.3f}s total  "
               f"{d['ms_per_iter']:>9.3f} ms/iter  ({d['iters']} iters)\n")
