@@ -1,0 +1,106 @@
+"""LM population training throughput: tokens/sec/member across backends.
+
+The LM analogue of ``benchmarks/population_update.py`` — population LM
+training (``rwkv6_test``, the tiny fp32 config) through the same backend
+registry the RL workloads use, measuring:
+
+  * ``sequential``        — the paper's Jax (Sequential) baseline: one jit'd
+                            single-member train step looped over members.
+  * ``vectorized``        — jit(vmap(train_step)), stock optax under vmap.
+  * ``vectorized+fused``  — the hoisted ``repro.optim.population_adam``
+                            update (``PopulationConfig.fused_adam``),
+                            bitwise-equal to stock on fp32 params.
+
+Per-member PBT hypers (lr_scale / weight_decay / warmup_frac) ride along as
+(N,) arrays so the measured path is the real PBT hot path, not the
+hypers=None fast path.  Each arm asserts ZERO steady-state recompiles via
+``repro.compat.register_compile_listener`` (registered after warmup): a
+recompile inside the timed loop invalidates the throughput number, so it is
+an error, not a footnote.
+
+CSV columns: impl, pop, batch, seq, ms_per_step, tokens_per_sec_per_member.
+``--json PATH`` additionally writes telemetry-schema JSONL rows
+(``kind="bench"``) via ``benchmarks.common.write_rows`` for
+``tools/report.py --check`` in CI.
+"""
+import argparse
+
+from common import emit, timeit, write_rows  # noqa: E402 (sys.path in common)
+
+import jax
+import jax.numpy as jnp
+
+from repro import compat
+from repro.configs import TrainConfig, get_config
+from repro.pop import make_update
+from repro.pop.agent import LMAgent
+
+
+def _make_arm(cfg, tcfg, pop, batch, seq, *, backend, fused):
+    agent = LMAgent(cfg, tcfg, fused_adam=fused)
+    keys = jax.random.split(jax.random.PRNGKey(0), pop)
+    state = jax.vmap(agent.init)(keys)
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (pop, batch, seq),
+                                0, cfg.vocab_size)
+    hypers = {
+        "lr_scale": jnp.linspace(0.5, 2.0, pop),
+        "weight_decay": jnp.full((pop,), tcfg.weight_decay, jnp.float32),
+        "warmup_frac": jnp.full((pop,), 0.1, jnp.float32),
+    }
+    update = make_update(agent, backend, num_steps=1, donate=False)
+    return update, state, {"tokens": tokens}, hypers
+
+
+def run(pop_sizes=(1, 4, 8), batch=4, seq=64, iters=3, json_path=None):
+    cfg = get_config("rwkv6_test")
+    tcfg = TrainConfig(total_steps=1000, warmup_steps=100, lr=3e-4,
+                       weight_decay=0.1)
+    arms = [("sequential", "sequential", False),
+            ("vectorized", "vectorized", False),
+            ("vectorized+fused", "vectorized", True)]
+
+    emit(["impl", "pop", "batch", "seq", "ms_per_step",
+          "tokens_per_sec_per_member"])
+    rows = []
+    for pop in pop_sizes:
+        for impl, backend, fused in arms:
+            update, state, batches, hypers = _make_arm(
+                cfg, tcfg, pop, batch, seq, backend=backend, fused=fused)
+            # warmup OUTSIDE the compile watch: first call compiles
+            jax.block_until_ready(update(state, batches, hypers))
+            steady = []
+            unregister = compat.register_compile_listener(
+                lambda event, secs: steady.append(event))
+            t = timeit(update, state, batches, hypers,
+                       iters=iters, warmup=0)
+            if unregister is not None:
+                unregister()
+            if steady:
+                raise AssertionError(
+                    f"{impl} pop={pop}: {len(steady)} steady-state "
+                    f"recompile(s) inside the timed loop: {steady}")
+            tps_member = batch * seq / t
+            emit([impl, pop, batch, seq, round(t * 1e3, 3),
+                  round(tps_member, 1)])
+            rows.append({"bench": "lm_population", "impl": impl,
+                         "pop": pop, "batch": batch, "seq": seq,
+                         "ms_per_step": t * 1e3,
+                         "tokens_per_sec_per_member": tps_member,
+                         "steady_compiles": len(steady)})
+    if json_path:
+        write_rows(rows, json_path)
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--fast", action="store_true",
+                    help="tiny grid for CI (pop 1 and 2, 1 timed iter)")
+    ap.add_argument("--json", metavar="PATH",
+                    help="also write telemetry-schema JSONL rows")
+    args = ap.parse_args()
+    if args.fast:
+        run(pop_sizes=(1, 2), batch=2, seq=32, iters=1,
+            json_path=args.json)
+    else:
+        run(json_path=args.json)

@@ -60,6 +60,8 @@ class LMConfig:
     ssm_compute_dtype: str = "float32"  # intra-chunk einsum dtype (perf knob)
     logits_chunk: int = 0          # >0: chunk the loss over the seq axis
     use_flash: bool = False        # Pallas flash attention (TPU only)
+    use_kernels: Optional[bool] = None  # kernels/ops dispatch: None = auto
+                                        # (TPU, non-differentiated forwards)
 
     @property
     def hd(self) -> int:

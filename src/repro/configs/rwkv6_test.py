@@ -1,0 +1,18 @@
+"""rwkv6-test [ssm] — tiny RWKV6 for CPU population-training tests.
+
+Same family/block structure as rwkv6-1.6b, scaled to run a population of 8
+through PopTrainer on one host: 2L d_model=64 vocab=256, fp32 master weights
+(the fused population-Adam bitwise-parity tests need fp32 — the stock path
+casts updates before the apply, the flattened path after, which only agree
+exactly on fp32 params), no remat, chunk 16 so seq_len 32 takes the chunked
+WKV path.
+"""
+from repro.configs.base import LMConfig
+
+CONFIG = LMConfig(
+    name="rwkv6-test", family="ssm",
+    num_layers=2, d_model=64, num_heads=2, num_kv_heads=2,
+    d_ff=128, vocab_size=256,
+    block_type="rwkv6", ssm_head_dim=32,
+    ssm_chunk=16, dtype="float32", remat=False,
+)

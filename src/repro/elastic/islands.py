@@ -20,6 +20,8 @@ runs, never what it computes.
 """
 from __future__ import annotations
 
+from functools import partial
+
 import jax
 from jax.sharding import PartitionSpec as P
 
@@ -71,10 +73,20 @@ def _build_islands(agent, num_steps: int, donate: bool, mesh=None):
 
     def stepped(pop_state, batches, hypers=None):
         m = resolve_mesh(pop_state)
-        key = (id(m), hypers is None)
+        # with a non-trivial (data, model) grid inside each island, a
+        # shard_map over "pop" alone would *replicate* the intra-island
+        # axes and ignore the model-sharded parameter placement; run the
+        # population-level body under plain jit instead and let GSPMD
+        # propagate the placed input shardings (see IslandLayout.place
+        # model_rules).
+        gspmd = m.devices.size > m.shape.get("pop", m.devices.size)
+        key = (id(m), hypers is None, gspmd)
         fn = compiled.get(key)
         if fn is None:
-            if hypers is None:
+            if gspmd:
+                body = (partial(local, hypers=None) if hypers is None
+                        else local)
+            elif hypers is None:
                 body = compat.shard_map(
                     lambda s, b: local(s, b, None), mesh=m,
                     in_specs=(state_spec, batch_spec),

@@ -126,14 +126,38 @@ class IslandLayout:
             cached = _MESH_CACHE[self] = _build_mesh(self)
         return cached
 
-    def place(self, tree):
+    def place(self, tree, *, model_rules: bool = False):
         """Place a population pytree onto the layout: leaves with a leading
         population axis are split over the ``"pop"`` mesh axis (one member
-        group per island); everything else is replicated."""
+        group per island); everything else is replicated.
+
+        ``model_rules=True`` additionally applies the ``models/sharding``
+        parameter rules over each island's (data, model) sub-mesh — the
+        LM-population placement, where every member is model-sharded inside
+        its island so members bigger than one accelerator still fit.  Under
+        ``population_mode`` the data ("F") rule axes resolve to None (the
+        batch carries data parallelism), so parameter leaves land on
+        ``P("pop", ..., "model")``."""
         import jax
         from jax.sharding import NamedSharding, PartitionSpec as P
         mesh = self.mesh
         n = self.population
+
+        if model_rules and self.model > 1:
+            from repro.models.sharding import (population_mode, spec_for,
+                                               _path_str)
+
+            def rule_sharding(path, leaf):
+                leaf = np.asarray(leaf) if not hasattr(leaf, "ndim") else leaf
+                if leaf.ndim >= 1 and leaf.shape[0] == n:
+                    spec = spec_for(_path_str(path), leaf.shape[1:], mesh)
+                    return NamedSharding(mesh, P("pop", *tuple(spec)))
+                return NamedSharding(mesh, P())
+
+            with population_mode():
+                shardings = jax.tree_util.tree_map_with_path(
+                    rule_sharding, tree)
+            return jax.device_put(tree, shardings)
 
         def sharding(leaf):
             leaf = np.asarray(leaf) if not hasattr(leaf, "ndim") else leaf

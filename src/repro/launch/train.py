@@ -191,6 +191,12 @@ def main(argv=None):
     ap.add_argument("--devices", type=int, default=0,
                     help="devices to lay the islands over (0 = all); the "
                     "layout is planned by repro.elastic.plan_layout")
+    ap.add_argument("--model-axis", type=int, default=1,
+                    help="preferred model-parallel width inside each "
+                    "island (islands backend): each member is sharded "
+                    "over its island's (data, model) sub-mesh by the "
+                    "models/sharding rules — how a 1.6B member fits per "
+                    "island")
     ap.add_argument("--resize", default="strict", choices=["strict", "auto"],
                     help="auto: resume a checkpoint whose population size "
                     "differs from --population via elastic re-layout "
@@ -233,17 +239,24 @@ def main(argv=None):
 
     pcfg = PopulationConfig(
         size=n, strategy=args.strategy, backend=args.backend,
-        pbt_interval=args.pbt_interval,
-        hyper_space=HyperSpace(log_uniform=(("lr_scale", 0.1, 10.0),)))
+        pbt_interval=args.pbt_interval, donate=False,  # async ckpts read state
+        fused_adam=args.fused_adam or args.fused_linear,
+        fused_linear=args.fused_linear,
+        hyper_space=HyperSpace(
+            log_uniform=(("lr_scale", 0.1, 10.0),
+                         ("weight_decay", 1e-3, 0.3)),
+            uniform=(("warmup_frac", 0.01, 0.25),)))
     layout = None
     if args.backend == "islands":
         from repro.elastic import plan_layout
-        layout = plan_layout(args.devices or len(jax.devices()), n)
+        layout = plan_layout(args.devices or len(jax.devices()), n,
+                             preferred_model=args.model_axis)
         print(f"[train] {layout}")
     telemetry = _telemetry(args, workload="lm", arch=cfg.name)
     trainer = PopTrainer(LMAgent(cfg, tcfg), pcfg, seed=args.seed,
                          layout=layout, checkpoint_dir=args.ckpt_dir,
                          telemetry=telemetry)
+    trainer.tokens_per_step = args.batch * args.seq_len
 
     start_step = 0
     if args.resume == "auto":
@@ -266,7 +279,10 @@ def main(argv=None):
                        seed=args.seed, start_step=start_step)
 
     def next_batch():
-        tokens = jnp.asarray(next(gen))
+        # phase-timed like the RL branch's collect/update split, so
+        # tools/report.py sees where LM wall-clock goes
+        with telemetry.phase("data"):
+            tokens = jnp.asarray(next(gen))
         if cfg.frontend == "audio_frames":
             batch = {"tokens": tokens,
                      "embeds": jnp.zeros(tokens.shape + (cfg.d_model,),

@@ -29,6 +29,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import LMConfig, ShapeSpec, TrainConfig
+from repro.kernels import ops as kernel_ops
 from repro.models.sharding import constrain, constrain_tree
 from repro.nn.attention import (gqa_apply, gqa_init, mla_apply, mla_init)
 from repro.nn.basic import (cast, embedding_init, glu_mlp_apply, glu_mlp_init,
@@ -38,7 +39,8 @@ from repro.nn.mamba2 import mamba2_block_apply, mamba2_block_init
 from repro.nn.moe import moe_apply, moe_init
 from repro.nn.rwkv6 import (channel_mix_apply, rwkv6_block_init,
                             time_mix_apply)
-from repro.optim import adam, apply_updates, warmup_cosine
+from repro.optim import (adam, apply_updates, dynamic_warmup_cosine,
+                         population_adam, warmup_cosine)
 
 
 # ---------------------------------------------------------------------------
@@ -111,7 +113,7 @@ def _attn_block_init(key, cfg: LMConfig, moe_layer: bool):
 
 
 def _attn_block_apply(p, cfg: LMConfig, h, positions, cache, cache_index,
-                      moe_layer: bool):
+                      moe_layer: bool, use_kernels=False):
     p = constrain_tree(p)  # pins param+cotangent shardings inside the scan
     y = rmsnorm_apply(p["attn_norm"], h)
     if cfg.mla is not None:
@@ -125,7 +127,8 @@ def _attn_block_apply(p, cfg: LMConfig, h, positions, cache, cache_index,
         y, new_cache = gqa_apply(
             p["attn"], y, positions, num_heads=cfg.num_heads,
             num_kv_heads=cfg.num_kv_heads, head_dim=cfg.hd,
-            rope_theta=cfg.rope_theta, cache=cache, cache_index=cache_index)
+            rope_theta=cfg.rope_theta, cache=cache, cache_index=cache_index,
+            attn_fn=kernel_ops.attention_fn(use_kernels))
     h = constrain(h + y, "F", "M", None)
     y = rmsnorm_apply(p["mlp_norm"], h)
     if moe_layer:
@@ -148,7 +151,7 @@ def _rwkv_block_init(key, cfg: LMConfig):
     return p
 
 
-def _rwkv_block_apply(p, cfg: LMConfig, h, state):
+def _rwkv_block_apply(p, cfg: LMConfig, h, state, use_kernels=False):
     """state: {"wkv","tm_x","cm_x"} (decode) or None (fresh zeros)."""
     p = constrain_tree(p)
     b = h.shape[0]
@@ -165,7 +168,8 @@ def _rwkv_block_apply(p, cfg: LMConfig, h, state):
                                   state["wkv"], head_dim=cfg.ssm_head_dim,
                                   use_chunked=cfg.use_chunked,
                                   chunk=min(cfg.ssm_chunk, 64),
-                                  compute_dtype=jnp.dtype(cfg.ssm_compute_dtype))
+                                  compute_dtype=jnp.dtype(cfg.ssm_compute_dtype),
+                                  use_kernels=use_kernels)
     h = constrain(h + y, "F", "M", None)
     x = layernorm_apply(p["ln2"], h)
     y, cm_x = channel_mix_apply(p["channel_mix"], x, state["cm_x"].astype(h.dtype))
@@ -182,7 +186,7 @@ def _mamba_layer_init(key, cfg: LMConfig):
                                        head_dim=cfg.ssm_head_dim)}
 
 
-def _mamba_layer_apply(p, cfg: LMConfig, h, state):
+def _mamba_layer_apply(p, cfg: LMConfig, h, state, use_kernels=False):
     p = constrain_tree(p)
     b = h.shape[0]
     if state is None:
@@ -195,7 +199,8 @@ def _mamba_layer_apply(p, cfg: LMConfig, h, state):
         p["mamba"], rmsnorm_apply(p["norm"], h), state,
         d_state=cfg.ssm_state, head_dim=cfg.ssm_head_dim,
         use_chunked=cfg.use_chunked, chunk=cfg.ssm_chunk,
-        compute_dtype=jnp.dtype(cfg.ssm_compute_dtype))
+        compute_dtype=jnp.dtype(cfg.ssm_compute_dtype),
+        use_kernels=use_kernels)
     return constrain(h + y, "F", "M", None), new_state
 
 
@@ -244,7 +249,8 @@ def init_params(key, cfg: LMConfig):
 
 
 def _segment_forward(seg: Segment, seg_params, shared_p, cfg: LMConfig, h,
-                     positions, seg_state, cache_index, train: bool):
+                     positions, seg_state, cache_index, train: bool,
+                     use_kernels=False):
     collect_state = seg_state is not None
 
     def body(h, xs):
@@ -253,23 +259,26 @@ def _segment_forward(seg: Segment, seg_params, shared_p, cfg: LMConfig, h,
         if seg.kind == "attn":
             cache = layer_st["kv"] if collect_state else None
             h, new_cache, aux = _attn_block_apply(
-                layer_p, cfg, h, positions, cache, cache_index, seg.moe)
+                layer_p, cfg, h, positions, cache, cache_index, seg.moe,
+                use_kernels)
             new_st = {"kv": new_cache} if collect_state else None
         elif seg.kind == "rwkv":
             h, new_st = _rwkv_block_apply(layer_p, cfg, h,
-                                          layer_st if collect_state else None)
+                                          layer_st if collect_state else None,
+                                          use_kernels)
             new_st = new_st if collect_state else None
         else:  # mamba (possibly zamba super-block with shared attention)
             if seg.shared_attn:
                 cache = layer_st["attn"]["kv"] if collect_state else None
                 h, new_cache, _ = _attn_block_apply(
-                    shared_p, cfg, h, positions, cache, cache_index, False)
+                    shared_p, cfg, h, positions, cache, cache_index, False,
+                    use_kernels)
                 new_mamba = []
                 for i in range(seg.inner):
                     pi = jax.tree.map(lambda a: a[i], layer_p)
                     sti = (jax.tree.map(lambda a: a[i], layer_st["mamba"])
                            if collect_state else None)
-                    h, st_i = _mamba_layer_apply(pi, cfg, h, sti)
+                    h, st_i = _mamba_layer_apply(pi, cfg, h, sti, use_kernels)
                     new_mamba.append(st_i)
                 if collect_state:
                     new_st = {"attn": {"kv": new_cache},
@@ -279,7 +288,8 @@ def _segment_forward(seg: Segment, seg_params, shared_p, cfg: LMConfig, h,
                     new_st = None
             else:
                 h, new_st = _mamba_layer_apply(layer_p, cfg, h,
-                                               layer_st if collect_state else None)
+                                               layer_st if collect_state else None,
+                                               use_kernels)
                 new_st = new_st if collect_state else None
         return h, (new_st, aux)
 
@@ -318,6 +328,12 @@ def forward(params, cfg: LMConfig, batch, state=None, cache_index=None,
             jnp.arange(s, dtype=jnp.int32), (b, s))
 
     h = constrain(h, "F", "M", None)
+    # kernels/ops dispatch: "auto" (None) means kernels only on TPU and only
+    # for non-differentiated forwards — the Pallas kernels carry no custom
+    # VJPs, so training autodiff always takes the (bitwise-pinned) jnp path.
+    uk = cfg.use_kernels
+    if uk is None:
+        uk = False if train else (True if cfg.use_flash else None)
     aux_total = jnp.zeros((), jnp.float32)
     new_state = {} if state is not None else None
     for seg in layout(cfg):
@@ -325,7 +341,7 @@ def forward(params, cfg: LMConfig, batch, state=None, cache_index=None,
         shared_p = cparams.get("shared_attn")
         h, seg_new, aux = _segment_forward(
             seg, cparams["segments"][seg.name], shared_p, cfg, h, positions,
-            seg_state, cache_index, train)
+            seg_state, cache_index, train, uk)
         if state is not None:
             new_state[seg.name] = seg_new
         aux_total = aux_total + aux
@@ -395,12 +411,12 @@ def lm_loss(params, cfg: LMConfig, batch, train: bool = True):
     return loss, {"ce": ce / jnp.maximum(n, 1.0), "aux": aux}
 
 
-def make_train_step(cfg: LMConfig, tcfg: TrainConfig):
-    opt_init, opt_update = adam(tcfg.lr, weight_decay=tcfg.weight_decay,
-                                max_grad_norm=tcfg.max_grad_norm)
-    schedule = warmup_cosine(tcfg.lr, tcfg.warmup_steps, tcfg.total_steps)
+def _make_grads_fn(cfg: LMConfig, tcfg: TrainConfig):
+    """Per-member gradient pass shared by the stock train step (scalar, run
+    under vmap by the vectorized backend) and the fused population update
+    (vmapped here) — ONE definition so both paths trace the same HLO."""
 
-    def train_step(params, opt_state, batch, step, lr_scale=None):
+    def grads_of(params, batch):
         if tcfg.grad_accum > 1:
             # microbatching: split the batch over the leading axis and
             # accumulate grads in fp32 via a scan (memory ~1/grad_accum)
@@ -423,16 +439,81 @@ def make_train_step(cfg: LMConfig, tcfg: TrainConfig):
         else:
             (loss, metrics), grads = jax.value_and_grad(
                 lambda p: lm_loss(p, cfg, batch), has_aux=True)(params)
-        lr = schedule(step)
+        return grads, loss, metrics
+
+    return grads_of
+
+
+def _make_lr_fn(tcfg: TrainConfig):
+    """``lr_at(step, lr_scale, warmup_frac)``: the static warmup-cosine
+    schedule when ``warmup_frac`` is None (legacy numerics), the dynamic
+    schedule when it is a traced PBT hyper.  Elementwise, so evaluating it
+    on ``(N,)`` vectors matches the scalar form under vmap bitwise."""
+    static = warmup_cosine(tcfg.lr, tcfg.warmup_steps, tcfg.total_steps)
+    dynamic = dynamic_warmup_cosine(tcfg.lr, tcfg.total_steps)
+
+    def lr_at(step, lr_scale=None, warmup_frac=None):
+        lr = static(step) if warmup_frac is None else dynamic(step, warmup_frac)
         if lr_scale is not None:
             lr = lr * lr_scale
+        return lr
+
+    return lr_at
+
+
+def make_train_step(cfg: LMConfig, tcfg: TrainConfig):
+    opt_init, opt_update = adam(tcfg.lr, weight_decay=tcfg.weight_decay,
+                                max_grad_norm=tcfg.max_grad_norm)
+    grads_of = _make_grads_fn(cfg, tcfg)
+    lr_at = _make_lr_fn(tcfg)
+
+    def train_step(params, opt_state, batch, step, lr_scale=None,
+                   weight_decay=None, warmup_frac=None):
+        grads, loss, metrics = grads_of(params, batch)
+        lr = lr_at(step, lr_scale, warmup_frac)
         updates, opt_state = opt_update(grads, opt_state, params,
-                                        lr_override=lr)
+                                        lr_override=lr,
+                                        wd_override=weight_decay)
         params = apply_updates(params, updates)
         metrics = dict(metrics, loss=loss, step=step)
         return params, opt_state, metrics
 
     return opt_init, train_step
+
+
+def make_population_update(cfg: LMConfig, tcfg: TrainConfig, *, fused=None):
+    """Population-level LM update with the optimizer hoisted into
+    :func:`repro.optim.population_adam` (PR 8's fused_adam hoist, LM
+    edition): per-member gradients under vmap, ONE flattened ``(N, P)``
+    Adam application for the whole population.  Signature matches the
+    backend registry's fused protocol::
+
+        update(pop_state, batch, hypers) -> (pop_state, metrics)
+
+    ``hypers`` may carry per-member ``lr_scale`` / ``weight_decay`` /
+    ``warmup_frac`` vectors; absent keys fall back to the static
+    ``TrainConfig`` values — in both cases the result is bitwise-equal to
+    the stock ``train_step`` under vmap (``tests/test_lm_population.py``
+    pins this on the tiny config)."""
+    _, pop_apply = population_adam(
+        tcfg.lr, weight_decay=tcfg.weight_decay,
+        max_grad_norm=tcfg.max_grad_norm, fused=fused)
+    grads_of = _make_grads_fn(cfg, tcfg)
+    lr_at = _make_lr_fn(tcfg)
+
+    def pop_update(state, batch, hypers=None):
+        from repro.pop.agent import LMState  # lazy: pop.agent imports lm
+        h = hypers if hypers else {}
+        grads, loss, metrics = jax.vmap(grads_of)(state.params, batch)
+        lr = lr_at(state.step, h.get("lr_scale"), h.get("warmup_frac"))
+        params, opt_state = pop_apply(state.params, grads, state.opt_state,
+                                      lr_override=lr,
+                                      wd_override=h.get("weight_decay"))
+        metrics = dict(metrics, loss=loss, step=state.step)
+        return LMState(params=params, opt_state=opt_state,
+                       step=state.step + 1), metrics
+
+    return pop_update
 
 
 def make_serve_step(cfg: LMConfig):

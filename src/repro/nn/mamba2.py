@@ -143,7 +143,8 @@ def _causal_conv(w, bias, x, x_prev):
 
 def mamba2_block_apply(p, x, state, *, d_state: int = 64, head_dim: int = 64,
                        expand: int = 2, use_chunked: bool = True,
-                       chunk: int = 128, compute_dtype=jnp.float32):
+                       chunk: int = 128, compute_dtype=jnp.float32,
+                       use_kernels=None):
     """x: (B,S,D); state from ``mamba2_init_state``. Returns (y, new_state)."""
     bsz, s, d_model = x.shape
     d_inner = expand * d_model
@@ -173,11 +174,10 @@ def mamba2_block_apply(p, x, state, *, d_state: int = 64, head_dim: int = 64,
     c = constrain(c, "F", None, None)
 
     x32, b32, c32 = (t.astype(jnp.float32) for t in (xh, b, c))
-    if use_chunked and s % chunk == 0 and s > 1:
-        y, ssm = ssd_chunked(x32, dt, a, b32, c32, state["ssm"], chunk=chunk,
-                             compute_dtype=compute_dtype)
-    else:
-        y, ssm = ssd_scan(x32, dt, a, b32, c32, state["ssm"])
+    from repro.kernels.ops import ssd_apply  # lazy: ops falls back to us
+    y, ssm = ssd_apply(x32, dt, a, b32, c32, state["ssm"],
+                       use_chunked=use_chunked, chunk=chunk,
+                       compute_dtype=compute_dtype, use_kernels=use_kernels)
     y = y + p["d_skip"][:, None] * x32
     y = constrain(y, "F", None, "M", None)
     y = y.reshape(bsz, s, d_inner).astype(x.dtype)

@@ -145,7 +145,7 @@ def _group_norm(p, x, n_heads: int, eps: float = 64e-5):
 
 def time_mix_apply(p, x, x_prev, wkv_state, *, head_dim: int = 64,
                    use_chunked: bool = True, chunk: int = 64,
-                   compute_dtype=jnp.float32):
+                   compute_dtype=jnp.float32, use_kernels=None):
     """x: (B,S,D); x_prev: (B,1,D) token before x[:,0]. Returns y, new state."""
     b, s, d = x.shape
     h = d // head_dim
@@ -176,11 +176,11 @@ def time_mix_apply(p, x, x_prev, wkv_state, *, head_dim: int = 64,
     lw = constrain(lw, "F", None, "M", None)
 
     r32, k32, v32 = (t.astype(jnp.float32) for t in (r, k, v))
-    if use_chunked and s % chunk == 0 and s > 1:
-        y, new_state = wkv6_chunked(r32, k32, v32, lw, u, wkv_state, chunk=chunk,
-                                    compute_dtype=compute_dtype)
-    else:
-        y, new_state = wkv6_scan(r32, k32, v32, lw, u, wkv_state)
+    from repro.kernels.ops import wkv6_apply  # lazy: ops falls back to us
+    y, new_state = wkv6_apply(r32, k32, v32, lw, u, wkv_state,
+                              use_chunked=use_chunked, chunk=chunk,
+                              compute_dtype=compute_dtype,
+                              use_kernels=use_kernels)
     y = constrain(y, "F", None, "M", None)
     y = y.reshape(b, s, d).astype(x.dtype)
     y = _group_norm(p["ln_x"], y, h) * g

@@ -1,6 +1,6 @@
 from repro.optim.optimizers import (  # noqa: F401
     adam, adamw, sgd, clip_by_global_norm, global_norm,
-    cosine_schedule, warmup_cosine, apply_updates,
+    cosine_schedule, warmup_cosine, dynamic_warmup_cosine, apply_updates,
 )
 from repro.optim.pop_adam import population_adam  # noqa: F401
 from repro.optim.compress import int8_compress, int8_decompress  # noqa: F401

@@ -46,8 +46,11 @@ def adam(lr: float = 3e-4, b1: float = 0.9, b2: float = 0.999,
         zeros = lambda: jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
         return AdamState(step=jnp.zeros((), jnp.int32), mu=zeros(), nu=zeros())
 
-    def update_fn(grads, state, params=None, lr_override=None):
+    def update_fn(grads, state, params=None, lr_override=None,
+                  wd_override=None):
         lr_t = lr if lr_override is None else lr_override
+        wd = weight_decay if wd_override is None else wd_override
+        decoupled = (wd_override is not None) or bool(weight_decay)
         if max_grad_norm is not None:
             grads, _ = clip_by_global_norm(grads, max_grad_norm)
         step = state.step + 1
@@ -60,11 +63,11 @@ def adam(lr: float = 3e-4, b1: float = 0.9, b2: float = 0.999,
 
         def upd(m, n, p):
             u = -(lr_t * (m / c1) / (jnp.sqrt(n / c2) + eps))
-            if weight_decay:
-                u = u - lr_t * weight_decay * p.astype(jnp.float32)
+            if decoupled:
+                u = u - lr_t * wd * p.astype(jnp.float32)
             return u
         updates = jax.tree.map(upd, mu, nu,
-                               params if weight_decay else jax.tree.map(lambda m: m, mu))
+                               params if decoupled else jax.tree.map(lambda m: m, mu))
         return updates, AdamState(step=step, mu=mu, nu=nu)
 
     return init_fn, update_fn
@@ -105,4 +108,24 @@ def warmup_cosine(base_lr: float, warmup_steps: int, total_steps: int,
         step = step.astype(jnp.float32)
         warm = base_lr * step / max(warmup_steps, 1)
         return jnp.where(step < warmup_steps, warm, cos(step - warmup_steps))
+    return lr_at
+
+
+def dynamic_warmup_cosine(base_lr: float, total_steps: int,
+                          final_frac: float = 0.1):
+    """:func:`warmup_cosine` with the warmup length as a *traced* fraction
+    of ``total_steps`` — the form PBT needs to treat warmup as a perturbable
+    per-member hyperparameter.  ``lr_at(step, warmup_frac)`` is elementwise,
+    so vmapping it over per-member ``(step, warmup_frac)`` scalars and
+    evaluating it on ``(N,)`` vectors produce the same lowering."""
+    def lr_at(step, warmup_frac):
+        step = step.astype(jnp.float32)
+        warm_steps = jnp.maximum(
+            jnp.asarray(warmup_frac, jnp.float32) * total_steps, 1.0)
+        span = jnp.maximum(total_steps - warm_steps, 1.0)
+        warm = base_lr * step / warm_steps
+        t = jnp.minimum(step - warm_steps, span) / span
+        cos = base_lr * (final_frac +
+                         (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t)))
+        return jnp.where(step < warm_steps, warm, cos)
     return lr_at

@@ -199,15 +199,36 @@ class LMState(NamedTuple):
 class LMAgent(AgentBase):
     """Adapter for ``repro.models.lm.make_train_step``.
 
-    The per-member hyperparameter is ``lr_scale`` (the paper's LM study);
-    fitness is the negative windowed loss.
+    Per-member PBT hypers are ``lr_scale`` (the paper's LM study) plus
+    ``weight_decay`` and ``warmup_frac`` (the Jaderberg et al. LM tuning
+    set); fitness is the negative windowed loss.  With
+    ``PopulationConfig.fused_adam`` the backends swap the stock
+    optax-under-vmap step for ``lm.make_population_update`` (one
+    ``population_adam`` application over the flattened population,
+    bitwise-equal on fp32 params).  ``model_sharded_params = True`` tells
+    the islands layout to apply the ``models/sharding`` rules over each
+    island's (data, model) sub-mesh when placing member parameters.
     """
 
-    def __init__(self, cfg, tcfg):
+    model_sharded_params = True
+
+    def __init__(self, cfg, tcfg, *, fused_adam: bool = False,
+                 fused_linear: bool = False):
         from repro.models import lm as lm_mod
         self.cfg, self.tcfg = cfg, tcfg
+        self._lm = lm_mod
         self._init_params = lm_mod.init_params
         self._opt_init, self._train_step = lm_mod.make_train_step(cfg, tcfg)
+        # flipped by PopTrainer from the PopulationConfig
+        self.fused_adam = fused_adam
+        self.fused_linear = fused_linear
+
+    @property
+    def default_hypers(self) -> dict:
+        return {"lr_scale": 1.0,
+                "weight_decay": self.tcfg.weight_decay,
+                "warmup_frac": self.tcfg.warmup_steps
+                / max(self.tcfg.total_steps, 1)}
 
     def init(self, key):
         params = self._init_params(key, self.cfg)
@@ -215,11 +236,18 @@ class LMAgent(AgentBase):
                        step=jnp.zeros((), jnp.int32))
 
     def update(self, state: LMState, batch, hypers=None):
-        lr_scale = None if not hypers else hypers.get("lr_scale")
+        h = hypers if hypers else {}
         params, opt_state, metrics = self._train_step(
             state.params, state.opt_state, batch, state.step,
-            lr_scale=lr_scale)
+            lr_scale=h.get("lr_scale"),
+            weight_decay=h.get("weight_decay"),
+            warmup_frac=h.get("warmup_frac"))
         return LMState(params, opt_state, state.step + 1), metrics
+
+    def fused_update(self):
+        """Population-level update for the fused_adam path (backend
+        registry protocol — same surface as ``ModuleAgent``)."""
+        return self._lm.make_population_update(self.cfg, self.tcfg)
 
     def policy(self, actor_params, obs, key=None):
         raise NotImplementedError("LM agents decode via repro.launch.serve")

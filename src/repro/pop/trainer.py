@@ -91,7 +91,10 @@ class PopTrainer:
             self.layout = layout if layout is not None else \
                 plan_layout(len(jax.devices()), self.n)
             self.mesh = mesh if mesh is not None else self.layout.mesh
-            self.state = self.layout.place(self.state)
+            self.state = self.layout.place(
+                self.state,
+                model_rules=bool(getattr(agent, "model_sharded_params",
+                                         False)))
             if self.hypers is not None:
                 self.hypers = self.layout.place(self.hypers)
         else:
@@ -103,6 +106,13 @@ class PopTrainer:
         self._window: deque = deque(maxlen=pcfg.fitness_window)
         self.last_fitness = None  # the (N,) fitness used at the last evolve
         self.step_count = 0
+        # LM workloads set tokens_per_step (per-member tokens consumed by
+        # one update call); step() then derives a dispatch-rate
+        # tokens_per_sec_per_member for the telemetry iter rows.  Host
+        # wall-clock between dispatches — no device sync in the hot path
+        # (benchmarks/lm_population.py does the blocked measurement).
+        self.tokens_per_step = None
+        self._iter_t = None
         self._rollout = None
         self._mgr = None
         if checkpoint_dir is not None:
@@ -130,7 +140,15 @@ class PopTrainer:
         if fit is not None:
             self.report_fitness(fit)
         lineage = self._maybe_evolve()
-        self.telemetry.record_iteration(self.step_count - 1, metrics=metrics)
+        extra = {}
+        if self.tokens_per_step:
+            now = time.perf_counter()
+            if self._iter_t is not None and now > self._iter_t:
+                extra["tokens_per_sec_per_member"] = \
+                    self.tokens_per_step / (now - self._iter_t)
+            self._iter_t = now
+        self.telemetry.record_iteration(self.step_count - 1, metrics=metrics,
+                                        **extra)
         return metrics, lineage
 
     def run(self, steps: int, batch_fn, *, on_step=None):

@@ -65,7 +65,7 @@ def test_applicable_shapes_policy():
     """long_500k runs only for sub-quadratic archs (DESIGN.md)."""
     long_ok = {a for a in _ARCHS
                if "long_500k" in applicable_shapes(get_config(a))}
-    assert long_ok == {"rwkv6_1_6b", "zamba2_7b"}
+    assert long_ok == {"rwkv6_1_6b", "zamba2_7b", "rwkv6_test"}
     for a in _ARCHS:
         shapes = applicable_shapes(get_config(a))
         assert {"train_4k", "prefill_32k", "decode_32k"} <= set(shapes)

@@ -218,8 +218,10 @@ def _fmt_members(vals, width: int = 8):
                           else str(v) for v in vals) + "]"
 
 
-def report(rows, out=sys.stdout) -> None:
-    w = out.write
+def report(rows, out=None) -> None:
+    # late-bind stdout: a default of ``sys.stdout`` freezes whatever stream
+    # is installed at import time (pytest capture, redirects)
+    w = (sys.stdout if out is None else out).write
     for run in by_kind(rows, "run"):
         meta = " ".join(f"{k}={v}" for k, v in (run.get("meta") or
                                                 {}).items())
